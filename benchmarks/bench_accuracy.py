@@ -1,0 +1,59 @@
+"""Paper Table 1 / Table 3 / Fig. 12: accuracy across budgets, the effect
+of finetuning, and the per-group bit maps chosen by the search engine
+(synthetic data; the *mechanisms* are what's validated — see DESIGN.md §8).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import RESNET_SMOKE
+from repro.core.hummingbird import HBConfig
+from repro.models import resnet
+from repro.search import finetune as ft, search_budget, search_eco
+from repro.search.simulator import evaluate_accuracy
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    params = resnet.init(key, RESNET_SMOKE)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (384, 3, 16, 16))
+    ys = (xs[:, 0, :8, :8].mean((1, 2)) > 0).astype(jnp.int32)
+
+    def afn(p, x, relu_fn=None):
+        return resnet.apply(p, x, RESNET_SMOKE, relu_fn=relu_fn)
+
+    groups = resnet.relu_group_elements(params, RESNET_SMOKE)
+    params, _ = ft.finetune(afn, params, xs[:256], ys[:256],
+                            HBConfig.exact(groups), jax.random.PRNGKey(5),
+                            epochs=5, batch=64, lr=3e-3)
+    val_x, val_y = xs[256:], ys[256:]
+    base = evaluate_accuracy(afn, params, val_x, val_y,
+                             HBConfig.exact(groups), jax.random.PRNGKey(6))
+    rows.append(("table1_baseline_acc", 0.0, f"acc={base:.4f}"))
+
+    for budget, bits in (("eco", None), ("8of64", (6, 8)), ("6of64", (5, 6))):
+        t0 = time.time()
+        if budget == "eco":
+            res = search_eco(afn, params, val_x, val_y, groups,
+                             jax.random.PRNGKey(2))
+        else:
+            res = search_budget(afn, params, val_x, val_y, groups,
+                                jax.random.PRNGKey(3),
+                                budget=eval(budget.replace("of", "/")),
+                                bit_choices=bits)
+        bitmap = ";".join(f"g{i}:k={l.k},m={l.m}"
+                          for i, l in enumerate(res.config.layers))
+        rows.append((f"fig12_bitmap_{budget}", (time.time() - t0) * 1e6, bitmap))
+        rows.append((f"table1_acc_{budget}", 0.0,
+                     f"acc={res.accuracy:.4f};drop={base-res.accuracy:.4f}"))
+        if budget != "eco":
+            p2, _ = ft.finetune(afn, params, xs[:256], ys[:256], res.config,
+                                jax.random.PRNGKey(7), epochs=2, batch=64)
+            post = evaluate_accuracy(afn, p2, val_x, val_y, res.config,
+                                     jax.random.PRNGKey(8))
+            rows.append((f"table3_finetune_{budget}", 0.0,
+                         f"before={res.accuracy:.4f};after={post:.4f};"
+                         f"delta={post-res.accuracy:+.4f}"))
+    return rows

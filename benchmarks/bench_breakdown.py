@@ -1,0 +1,35 @@
+"""Paper Fig. 10: overhead breakdown (communication vs compute) as the
+budget tightens — HummingBird shifts the bottleneck toward compute."""
+import time
+
+import jax
+
+from repro.configs.resnet import RESNET18
+from repro.core import costmodel
+from repro.core.hummingbird import HBConfig, HBLayer
+from repro.models import resnet
+
+LAN_BW, LAN_RTT = 10e9 / 8, 50e-6
+BATCH = 512
+
+
+def run():
+    rows = []
+    params = resnet.init(jax.random.PRNGKey(0), RESNET18)
+    groups = [g * BATCH for g in resnet.relu_group_elements(params, RESNET18)]
+    # A100-class compute floor from the paper's Fig.10 (7% of 26.8s)
+    compute_s = 1.9
+    for name, cfg in (
+        ("crypten64", HBConfig.exact(groups)),
+        ("8of64", HBConfig(tuple(HBLayer(k=21, m=13) for _ in groups),
+                           tuple(groups))),
+    ):
+        t0 = time.time()
+        cost = costmodel.model_relu_cost(cfg)
+        comm_s = costmodel.latency_model(cost, LAN_BW, LAN_RTT, 0.0)
+        total = comm_s + compute_s
+        us = (time.time() - t0) * 1e6
+        rows.append((f"fig10_{name}", us,
+                     f"comm_frac={comm_s/total:.3f};comm_s={comm_s:.2f};"
+                     f"compute_s={compute_s:.2f}"))
+    return rows

@@ -1,0 +1,47 @@
+"""Paper Fig. 3 + Fig. 11: ReLU communication breakdown and reduction.
+
+Reports the closed-form cost model (validated against HLO collectives in
+tests) for ResNet18/50-shaped ReLU stacks at the paper's budgets.
+"""
+import time
+
+import jax
+
+from repro.configs.resnet import RESNET18, RESNET50
+from repro.core import costmodel
+from repro.core.hummingbird import HBConfig, HBLayer
+from repro.models import resnet
+
+
+def _groups(rcfg):
+    params = resnet.init(jax.random.PRNGKey(0), rcfg)
+    return resnet.relu_group_elements(params, rcfg)
+
+
+def _cfg(groups, width, m):
+    return HBConfig(tuple(HBLayer(k=width + m, m=m) for _ in groups),
+                    tuple(groups))
+
+
+def run():
+    rows = []
+    for rcfg in (RESNET18, RESNET50):
+        groups = _groups(rcfg)
+        base = costmodel.model_relu_cost(HBConfig.exact(groups))
+        t0 = time.time()
+        frac = {k: v / base.bytes_tx for k, v in base.breakdown.items()}
+        us = (time.time() - t0) * 1e6
+        rows.append((f"fig3_breakdown_{rcfg.name}", us,
+                     f"circuit={frac['circuit']:.3f};others={frac['others']:.3f};"
+                     f"b2a={frac['b2a']:.3f};mult={frac['mult']:.3f}"))
+        for name, width, m in (("eco", 21, 0), ("8of64", 8, 13), ("6of64", 6, 14)):
+            t0 = time.time()
+            cfg = _cfg(groups, width, m) if name != "eco" else HBConfig(
+                tuple(HBLayer(k=21, m=0) for _ in groups), tuple(groups))
+            r = costmodel.reduction_factors(cfg)
+            us = (time.time() - t0) * 1e6
+            rows.append((f"fig11_{rcfg.name}_{name}", us,
+                         f"bytes_red={r['bytes_reduction']:.2f}x;"
+                         f"rounds_red={r['rounds_reduction']:.2f}x;"
+                         f"bits_discarded={r['bits_discarded_frac']:.3f}"))
+    return rows

@@ -1,0 +1,67 @@
+"""Paper Fig. 1 / 7 / 8 / 9: end-to-end latency + speedup projection.
+
+Methodology follows §5.2: communication volume comes from the (validated)
+cost model; compute time is measured on this host for the linear layers
+and scaled; the network term is projected at High-BW / LAN / WAN
+bandwidths exactly as the paper projects its WAN numbers.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.resnet import RESNET18, RESNET50
+from repro.core import costmodel
+from repro.core.hummingbird import HBConfig, HBLayer
+from repro.models import resnet
+
+NETWORKS = {
+    "highbw": (16e12 / 8, 10e-6),   # 16 Tbps NVLink-class, 10us rtt
+    "lan": (10e9 / 8, 50e-6),       # 10 Gbps, 50us
+    "wan": (352e6 / 8, 20e-3),      # 352 Mbps, 20ms (paper's WAN)
+}
+BATCH = 512
+
+
+def _measure_compute_s(rcfg) -> float:
+    """Plaintext linear-layer time for one batch on this host, as the
+    compute floor (MPC linear ops are public-weight and local)."""
+    params = resnet.init(jax.random.PRNGKey(0), rcfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 3, rcfg.in_hw, rcfg.in_hw))
+    fn = jax.jit(lambda p, x: resnet.apply(p, x, rcfg))
+    fn(params, x).block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        fn(params, x).block_until_ready()
+    per8 = (time.time() - t0) / 3
+    return per8 * (BATCH / 8)
+
+
+def run():
+    rows = []
+    for rcfg in (RESNET18, RESNET50):
+        params = resnet.init(jax.random.PRNGKey(0), rcfg)
+        groups = resnet.relu_group_elements(params, rcfg)
+        groups = [g * BATCH for g in groups]
+        compute_s = _measure_compute_s(rcfg)
+        configs = {
+            "crypten64": HBConfig.exact(groups),
+            "eco": HBConfig(tuple(HBLayer(k=21, m=0) for _ in groups),
+                            tuple(groups)),
+            "8of64": HBConfig(tuple(HBLayer(k=21, m=13) for _ in groups),
+                              tuple(groups)),
+            "6of64": HBConfig(tuple(HBLayer(k=20, m=14) for _ in groups),
+                              tuple(groups)),
+        }
+        for net, (bw, rtt) in NETWORKS.items():
+            base_cost = costmodel.model_relu_cost(configs["crypten64"])
+            base_lat = costmodel.latency_model(base_cost, bw, rtt, compute_s)
+            for name, cfg in configs.items():
+                t0 = time.time()
+                cost = costmodel.model_relu_cost(cfg)
+                lat = costmodel.latency_model(cost, bw, rtt, compute_s)
+                us = (time.time() - t0) * 1e6
+                rows.append((f"e2e_{rcfg.name}_{net}_{name}", us,
+                             f"latency_s={lat:.3f};speedup={base_lat/lat:.2f}x;"
+                             f"throughput={BATCH/lat:.1f}sps"))
+    return rows

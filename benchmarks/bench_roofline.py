@@ -1,0 +1,26 @@
+"""EXPERIMENTS.md §Roofline reader: aggregates results/dryrun/*.json."""
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run():
+    rows = []
+    if not RESULTS.exists():
+        return [("roofline_missing", 0.0, "run repro.launch.dryrun first")]
+    for f in sorted(RESULTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") != "ok":
+            rows.append((f"roofline_{f.stem}", 0.0,
+                         f"status={d.get('status')};{d.get('reason', d.get('error', ''))[:60]}"))
+            continue
+        r = d.get("roofline", {})
+        rows.append((
+            f"roofline_{f.stem}",
+            float(d.get("compile_s", 0)) * 1e6,
+            f"dom={r.get('dominant')};compute_s={r.get('compute_s')};"
+            f"mem_s={r.get('memory_s')};coll_s={r.get('collective_s')};"
+            f"useful={r.get('useful_flops_ratio')};"
+            f"frac={r.get('roofline_fraction')}"))
+    return rows

@@ -1,0 +1,24 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_accuracy, bench_breakdown, bench_comm,
+                            bench_e2e, bench_roofline, bench_search)
+    mods = [bench_comm, bench_e2e, bench_breakdown, bench_search,
+            bench_accuracy, bench_roofline]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for mod in mods:
+        if only and only not in mod.__name__:
+            continue
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:
+            print(f"{mod.__name__}_ERROR,0,{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

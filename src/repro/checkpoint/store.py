@@ -1,0 +1,138 @@
+"""Sharded checkpointing: npz payloads + msgpack manifest, atomic commit.
+
+Layout: <dir>/step_<N>/
+  manifest.msgpack   - pytree structure, shapes, dtypes, step metadata
+  arrays.npz         - flattened leaves keyed by index
+  COMMITTED          - sentinel written last (atomic rename of tmp dir)
+
+Restores re-shard onto whatever mesh/sharding the caller provides (elastic
+down/up-scaling: a checkpoint written on N hosts loads on M), and the
+async writer overlaps serialization with the next training step.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _paths(tree) -> List[str]:
+    out = []
+    for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out.append("/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None):
+    """Synchronous atomic checkpoint write."""
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, _ = _flatten(tree)
+    arrays = {str(i): np.asarray(jax.device_get(x)) for i, x in enumerate(leaves)}
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "paths": _paths(tree),
+        "shapes": [list(a.shape) for a in arrays.values()],
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "extra": extra or {},
+        "time": time.time(),
+    }
+    (tmp / "manifest.msgpack").write_bytes(msgpack.packb(manifest))
+    (tmp / "COMMITTED").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    _prune(ckpt_dir, keep=3)
+
+
+def _prune(ckpt_dir: Path, keep: int):
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if (p / "COMMITTED").exists())
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+                   if (p / "COMMITTED").exists())
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
+            shardings: Any = None):
+    """Restore into the structure of `tree_like`; re-shards with
+    `shardings` (a pytree of NamedSharding) if given — this is the elastic
+    path: the checkpoint's host/mesh layout is irrelevant."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = msgpack.unpackb((d / "manifest.msgpack").read_bytes())
+    data = np.load(d / "arrays.npz")
+    leaves, treedef = _flatten(tree_like)
+    assert len(leaves) == len(manifest["paths"]), (
+        f"checkpoint has {len(manifest['paths'])} leaves, "
+        f"model expects {len(leaves)}")
+    out = []
+    sh_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                 if shardings is not None else [None] * len(leaves))
+    for i, (ref, sh) in enumerate(zip(leaves, sh_leaves)):
+        arr = data[str(i)]
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(out), manifest
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint serialization with training (one in flight)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[Exception] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        self.wait()
+        # device_get on the main thread (jax arrays are not thread-movable
+        # mid-step), serialize + write on the worker
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, extra)
+            except Exception as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err

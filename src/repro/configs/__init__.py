@@ -1,0 +1,7 @@
+"""Architecture + shape configs; one module per assigned architecture."""
+from .base import SHAPES, ArchConfig, ShapeConfig, shape_applicable, smoke_variant
+from .registry import ARCHS, all_names, get
+from .resnet import RESNET18, RESNET50, SMOKE as RESNET_SMOKE, ResNetConfig
+__all__ = ["SHAPES", "ArchConfig", "ShapeConfig", "shape_applicable",
+           "smoke_variant", "ARCHS", "all_names", "get", "RESNET18",
+           "RESNET50", "RESNET_SMOKE", "ResNetConfig"]

@@ -1,0 +1,23 @@
+"""HummingBird core: reduced-ring MPC ReLU on Z/2^64 in JAX.
+
+Layering:
+  ring         - Z/2^64 limb arithmetic (TPU-native, no int64)
+  fixed        - fixed-point codec (CrypTen-compatible scale 2^16)
+  shares       - arithmetic + packed binary secret sharing
+  beaver       - TTP triple provider
+  comm         - party communicator (sim / mesh backends)
+  gmw          - A2B, DReLU, B2A, ReLU (exact Eq.2 + reduced-ring Eq.3)
+  hummingbird  - per-layer (k, m) configs and budgets
+  costmodel    - closed-form bytes/rounds (validated against HLO collectives)
+  ring_linalg  - mod-2^64 matmul/conv with public weights (plane decomposition)
+  mpc_tensor   - user-facing secret-shared tensor
+"""
+from . import beaver, comm, costmodel, fixed, gmw, hummingbird, ring, ring_linalg, shares
+from .hummingbird import HBConfig, HBLayer, safe_k
+from .mpc_tensor import MPCTensor, encode_weights
+
+__all__ = [
+    "beaver", "comm", "costmodel", "fixed", "gmw", "hummingbird", "ring",
+    "ring_linalg", "shares", "HBConfig", "HBLayer", "safe_k", "MPCTensor",
+    "encode_weights",
+]

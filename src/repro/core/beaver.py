@@ -1,0 +1,133 @@
+"""Trusted-third-party Beaver triple provider.
+
+The paper's evaluation (§5.1) assumes triples are generated offline by a TTP
+(or stored pre-generated), so triple generation is excluded from
+communication/latency accounting.  We generate them deterministically from a
+PRG key; shares carry the leading party dimension so they can be fed into
+both the sim backend and (party-sharded) into the mesh backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ring, shares
+
+_U32 = jnp.uint32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ArithTriple:
+    """Additive shares of (a, b, c = a*b) on Z/2^64, party dim leading."""
+
+    a: ring.Ring64
+    b: ring.Ring64
+    c: ring.Ring64
+
+    def tree_flatten(self):
+        return (self.a, self.b, self.c), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BinTriple:
+    """XOR shares of packed-word (a, b, c = a & b), party dim leading."""
+
+    a: jax.Array
+    b: jax.Array
+    c: jax.Array
+
+    def tree_flatten(self):
+        return (self.a, self.b, self.c), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def gen_arith(key, shape, n_parties: int = 2) -> ArithTriple:
+    ka, kb, ksa, ksb, ksc = jax.random.split(key, 5)
+    a = ring.uniform(ka, shape)
+    b = ring.uniform(kb, shape)
+    c = ring.mul(a, b)
+    return ArithTriple(
+        shares.share(ksa, a, n_parties),
+        shares.share(ksb, b, n_parties),
+        shares.share(ksc, c, n_parties),
+    )
+
+
+def gen_bin(key, shape, n_parties: int = 2) -> BinTriple:
+    ka, kb, ksa, ksb, ksc = jax.random.split(key, 5)
+    a = jax.random.bits(ka, shape, dtype=_U32)
+    b = jax.random.bits(kb, shape, dtype=_U32)
+    c = a & b
+    return BinTriple(
+        shares.xor_share_packed(ksa, a, n_parties),
+        shares.xor_share_packed(ksb, b, n_parties),
+        shares.xor_share_packed(ksc, c, n_parties),
+    )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ReluTriples:
+    """Everything one approximate-ReLU evaluation consumes, pre-generated.
+
+    For E elements and a w-bit reduced ring (W = ceil(E/32) packed words,
+    L = ceil(log2(w)) Kogge-Stone levels):
+      - bin_init:   (P, w, W) AND triple for the initial generate plane
+      - bin_levels: (L, P, 2w, W) one batched AND triple per level
+      - b2a:        (P, E) arithmetic triple for the sign-bit B2A
+      - mult:       (P, E) arithmetic triple for the final x * DReLU(x)
+    """
+
+    bin_init: BinTriple
+    bin_levels: BinTriple  # leading L axis on each member
+    b2a: ArithTriple
+    mult: ArithTriple
+
+    def tree_flatten(self):
+        return (self.bin_init, self.bin_levels, self.b2a, self.mult), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def n_levels(w: int) -> int:
+    return max(0, math.ceil(math.log2(w))) if w > 1 else 0
+
+
+def gen_relu_triples(key, n_elements: int, w: int, n_parties: int = 2,
+                     cone: bool = False) -> ReluTriples:
+    """cone=True sizes the AND triples to the MSB-cone-pruned circuit
+    (bin_levels becomes a per-level tuple — sizes are ragged)."""
+    W = shares.packed_words(n_elements)
+    L = n_levels(w)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if cone and w > 1:
+        from . import gmw  # late: gmw imports beaver
+        init_pos, level_sets = gmw.cone_sets(w)
+        bin_init = gen_bin(k1, (len(init_pos), W), n_parties)
+        bin_levels = tuple(
+            gen_bin(k, (2 * max(len(pos), 1), W), n_parties)
+            for k, pos in zip(jax.random.split(k2, max(L, 1)), level_sets))
+    else:
+        bin_init = gen_bin(k1, (w, W), n_parties)
+        levels = [gen_bin(k, (2 * w, W), n_parties)
+                  for k in jax.random.split(k2, max(L, 1))]
+        bin_levels = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *levels)
+    b2a = gen_arith(k3, (n_elements,), n_parties)
+    mult = gen_arith(k4, (n_elements,), n_parties)
+    return ReluTriples(bin_init, bin_levels, b2a, mult)

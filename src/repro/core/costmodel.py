@@ -1,0 +1,96 @@
+"""Closed-form communication cost model for the GMW ReLU protocol.
+
+Bytes and rounds are exact deterministic functions of (n_elements, ring
+width); tests validate these formulas against collective-permute bytes
+parsed from the compiled mesh-backend HLO, and the benchmarks use them to
+reproduce the paper's Figure 3 / Figure 11 communication numbers.
+
+All byte counts are *per party per direction* (what one party transmits);
+with 2 parties, total wire traffic is 2x these numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from . import beaver, shares
+from .hummingbird import HBConfig, RING_BITS
+
+WORD_BYTES = 4        # packed u32 wire words
+RING_BYTES = 8        # one Z/2^64 element
+
+
+@dataclasses.dataclass(frozen=True)
+class CommCost:
+    bytes_tx: int                 # per party, one direction
+    rounds: int
+    breakdown: Dict[str, int]     # paper Figure 3 categories
+
+    def __add__(self, other: "CommCost") -> "CommCost":
+        bd = dict(self.breakdown)
+        for k, v in other.breakdown.items():
+            bd[k] = bd.get(k, 0) + v
+        return CommCost(self.bytes_tx + other.bytes_tx,
+                        self.rounds + other.rounds, bd)
+
+    @staticmethod
+    def zero() -> "CommCost":
+        return CommCost(0, 0, {})
+
+
+def relu_cost(n_elements: int, w: int = RING_BITS,
+              cone: bool = False) -> CommCost:
+    """One ReLU over n_elements with a w-bit DReLU ring (w = k - m).
+
+    cone=True prices the MSB-cone-pruned adder (same rounds, O(w) gates
+    instead of O(w log w) — EXPERIMENTS.md §Perf iteration C2)."""
+    W = shares.packed_words(n_elements)
+    L = beaver.n_levels(w)
+    prep = w * W * WORD_BYTES                      # A2B mask exchange ("Others")
+    if cone and w > 1:
+        from . import gmw
+        init_pos, level_sets = gmw.cone_sets(w)
+        init_and = 2 * len(init_pos) * W * WORD_BYTES
+        level_ands = sum(2 * (2 * max(len(pos), 1)) * W * WORD_BYTES
+                         for pos in level_sets)
+    else:
+        init_and = 2 * w * W * WORD_BYTES          # open (d, e) of initial AND
+        level_ands = L * 2 * (2 * w) * W * WORD_BYTES
+    circuit = init_and + level_ands
+    b2a = 2 * n_elements * RING_BYTES              # one Beaver mult on Z/2^64
+    mult = 2 * n_elements * RING_BYTES             # final x * DReLU(x)
+    total = prep + circuit + b2a + mult
+    rounds = 1 + (1 + L if w > 1 else 0) + 1 + 1
+    return CommCost(total, rounds, {
+        "circuit": circuit, "others": prep, "b2a": b2a, "mult": mult,
+    })
+
+
+def model_relu_cost(cfg: HBConfig) -> CommCost:
+    """Total ReLU communication of a model under an HBConfig."""
+    total = CommCost.zero()
+    for layer, n in zip(cfg.layers, cfg.group_elements):
+        total = total + relu_cost(n, layer.width)
+    return total
+
+
+def reduction_factors(cfg: HBConfig) -> Dict[str, float]:
+    base = model_relu_cost(HBConfig.exact(cfg.group_elements))
+    hb = model_relu_cost(cfg)
+    return {
+        "bytes_reduction": base.bytes_tx / max(1, hb.bytes_tx),
+        "rounds_reduction": base.rounds / max(1, hb.rounds),
+        "bits_discarded_frac": 1.0 - cfg.budget_fraction(),
+    }
+
+
+def latency_model(cost: CommCost, bandwidth_bps: float, rtt_s: float,
+                  compute_s: float = 0.0) -> float:
+    """End-to-end latency estimate: serialization + per-round RTT + compute.
+
+    This is the projection methodology the paper uses for its WAN numbers
+    (§5.2: communication measured, then scaled by assumed bandwidth).
+    """
+    wire = 2 * cost.bytes_tx * 8 / bandwidth_bps   # both directions share the link
+    return wire + cost.rounds * rtt_s + compute_s

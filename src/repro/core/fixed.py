@@ -1,0 +1,44 @@
+"""Fixed-point codec between floats and Z/2^64 ring elements.
+
+CrypTen encodes x_f as x = round(x_f * 2^16) on a 64-bit ring.  We keep the
+same default scale so the paper's k in [18, 22] regime is directly
+reproducible (activations |x_f| < 2^(k-17) keep Theorem 1 exact).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ring
+
+DEFAULT_FRAC_BITS = 16
+
+
+def encode(x_f: jax.Array, frac_bits: int = DEFAULT_FRAC_BITS) -> ring.Ring64:
+    """float -> ring. Requires |x_f * 2^frac| < 2^31 (always true for DNN
+    activations/weights at the CrypTen scale)."""
+    xi = jnp.round(x_f.astype(jnp.float32) * (2.0 ** frac_bits)).astype(jnp.int32)
+    return ring.from_int32(xi)
+
+
+def decode(x: ring.Ring64, frac_bits: int = DEFAULT_FRAC_BITS) -> jax.Array:
+    """ring -> float32 (in-jit, approximate above 2^24 magnitudes)."""
+    sign = ring.is_negative(x)
+    mag = ring.where(sign.astype(bool), ring.neg(x), x)
+    val = mag.hi.astype(jnp.float32) * (2.0 ** 32) + mag.lo.astype(jnp.float32)
+    val = jnp.where(sign.astype(bool), -val, val)
+    return val / (2.0 ** frac_bits)
+
+
+def decode_np(x: ring.Ring64, frac_bits: int = DEFAULT_FRAC_BITS) -> np.ndarray:
+    """Exact host-side decode via numpy int64 (test oracle)."""
+    u = ring.to_uint64_np(x)
+    s = u.view(np.int64) if u.dtype == np.uint64 else u.astype(np.int64)
+    return s.astype(np.float64) / (2.0 ** frac_bits)
+
+
+def encode_np(x_f: np.ndarray, frac_bits: int = DEFAULT_FRAC_BITS) -> ring.Ring64:
+    """Exact host-side encode via numpy (test oracle)."""
+    xi = np.round(np.asarray(x_f, np.float64) * 2.0 ** frac_bits).astype(np.int64)
+    return ring.from_uint64_np(xi.view(np.uint64))

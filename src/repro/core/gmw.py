@@ -1,0 +1,234 @@
+"""GMW protocol: A2B, DReLU, B2A, exact ReLU (Eq. 2) and HummingBird's
+reduced-ring approximate ReLU (Eq. 3).
+
+All functions operate on arrays with a leading party dimension and a
+``Comm`` backend (SimComm on one host, MeshComm inside shard_map), so the
+same protocol code runs in the search simulator and on the production mesh.
+
+Communication structure (matches §2.2/§2.3 of the paper):
+  - A2B prep: each party XOR-shares its arithmetic share      (1 round)
+  - adder "Circuit": initial AND + ceil(log2 w) batched ANDs  (1+L rounds)
+  - B2A of the sign bit: one Beaver mult on Z/2^64            (1 round)
+  - final Mult x*DReLU(x): one Beaver mult on Z/2^64          (1 round)
+HummingBird only shrinks the Circuit/prep terms (w = k-m instead of 64),
+exactly as the paper's Figure 3/4 describe.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import beaver, comm as comm_lib, ring, shares
+
+_U32 = jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# Secure AND on packed binary shares (one communication round)
+# ---------------------------------------------------------------------------
+
+def and_open(x, y, triple: beaver.BinTriple, comm) -> jax.Array:
+    """z = x & y on XOR-shared packed words. One swap (round) of (d, e)."""
+    from repro.kernels import ops as kops  # lazy: kernels import core.ring
+
+    d = x ^ triple.a
+    e = y ^ triple.b
+    opened = comm.swap(jnp.stack([d, e], axis=1))  # single exchange
+    d_open = d ^ opened[:, 0]
+    e_open = e ^ opened[:, 1]
+    p0 = comm.party_is(0, x)
+    sel = jnp.where(p0, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+    # local evaluation fused in one VMEM pass (kernels/gmw_round.py)
+    return kops.beaver_and(d_open, e_open, triple.a, triple.b, triple.c, sel)
+
+
+# ---------------------------------------------------------------------------
+# Kogge-Stone adder over packed bitplanes -> MSB (sign) of x + y mod 2^w
+# ---------------------------------------------------------------------------
+
+def _shift_planes(x: jax.Array, d: int) -> jax.Array:
+    """Plane-axis shift: out[..., i, :] = x[..., i-d, :], zeros below."""
+    if d == 0:
+        return x
+    pad = jnp.zeros(x.shape[:-2] + (d,) + x.shape[-1:], x.dtype)
+    return jnp.concatenate([pad, x[..., :-d, :]], axis=-2)
+
+
+def cone_sets(w: int):
+    """Backward cone of the single output G[w-2] through the Kogge-Stone
+    levels (beyond-paper optimization: DReLU consumes only the MSB carry,
+    so prefix positions outside the cone are dead code).
+
+    Returns (init_positions, [(level_update_positions), ...]) with one
+    entry per level; total AND gates ~ 2(w-1) instead of w(1+2*log2 w).
+    """
+    L = beaver.n_levels(w)
+    needed = {w - 2}
+    level_sets = []
+    for lvl in reversed(range(L)):
+        d = 1 << lvl
+        level_sets.append(sorted(i for i in needed if i - d >= 0))
+        needed = needed | {i - d for i in needed if i - d >= 0}
+    level_sets.reverse()
+    return sorted(needed), level_sets
+
+
+def adder_msb(xw: jax.Array, yw: jax.Array, triples: beaver.ReluTriples,
+              comm, w: int, cone: bool = False) -> jax.Array:
+    """XOR shares of the MSB of (x + y mod 2^w).
+
+    xw, yw: (P, w, W) packed plane shares of the two addends.
+    Returns (P, W) packed shares of the sign plane.
+
+    cone=True prunes every AND outside the backward cone of G[w-2]
+    (same round count, ~log(w)/2 x fewer gate-bits on the wire — a
+    beyond-paper optimization, see EXPERIMENTS.md §Perf iteration C2).
+    """
+    p0 = xw ^ yw                      # initial propagate (local)
+    if w == 1:
+        return p0[..., 0, :]
+    L = beaver.n_levels(w)
+    if not cone:
+        g = and_open(xw, yw, triples.bin_init, comm)   # initial generate
+        p = p0
+        for lvl in range(L):
+            d = 1 << lvl
+            g_sh = _shift_planes(g, d)
+            p_sh = _shift_planes(p, d)
+            lhs = jnp.concatenate([p, p], axis=-2)          # (P, 2w, W)
+            rhs = jnp.concatenate([g_sh, p_sh], axis=-2)
+            tri = jax.tree_util.tree_map(lambda t: t[lvl], triples.bin_levels)
+            out = and_open(lhs, rhs, tri, comm)             # one round
+            g = g ^ out[..., :w, :]
+            p = out[..., w:, :]
+        # carry into bit (w-1) is prefix-generate of bit (w-2)
+        return p0[..., w - 1, :] ^ g[..., w - 2, :]
+
+    init_pos, level_sets = cone_sets(w)
+    ip = jnp.asarray(init_pos)
+    g_sub = and_open(xw[..., ip, :], yw[..., ip, :], triples.bin_init, comm)
+    g = jnp.zeros_like(xw).at[..., ip, :].set(g_sub)
+    p = p0
+    for lvl in range(L):
+        d = 1 << lvl
+        pos = level_sets[lvl]
+        if not pos:
+            continue
+        ii = jnp.asarray(pos)
+        im = jnp.asarray([i - d for i in pos])
+        p_i = p[..., ii, :]
+        lhs = jnp.concatenate([p_i, p_i], axis=-2)
+        rhs = jnp.concatenate([g[..., im, :], p[..., im, :]], axis=-2)
+        tri = triples.bin_levels[lvl]
+        out = and_open(lhs, rhs, tri, comm)                 # one round
+        n = len(pos)
+        g = g.at[..., ii, :].set(g[..., ii, :] ^ out[..., :n, :])
+        p = p.at[..., ii, :].set(out[..., n:, :])
+    return p0[..., w - 1, :] ^ g[..., w - 2, :]
+
+
+# ---------------------------------------------------------------------------
+# A2B prep: XOR-share each party's (reduced-ring) arithmetic share
+# ---------------------------------------------------------------------------
+
+def a2b_prepare(key, v_packed: jax.Array, comm) -> Tuple[jax.Array, jax.Array]:
+    """From each party's packed plaintext planes (P, w, W) of its own
+    arithmetic share, produce XOR shares of party0's and party1's values
+    held by both parties.  One round (mask exchange)."""
+    r = jax.random.bits(key, v_packed.shape, dtype=_U32)
+    masked = v_packed ^ r
+    other_mask = comm.swap(r)
+    p0 = comm.party_is(0, v_packed)
+    x0_shares = jnp.where(p0, masked, other_mask)   # shares of party0's value
+    x1_shares = jnp.where(p0, other_mask, masked)   # shares of party1's value
+    return x0_shares, x1_shares
+
+
+# ---------------------------------------------------------------------------
+# Beaver multiplication on Z/2^64 (one round)
+# ---------------------------------------------------------------------------
+
+def beaver_mul(x: ring.Ring64, y: ring.Ring64, triple: beaver.ArithTriple,
+               comm) -> ring.Ring64:
+    e = ring.sub(x, triple.a)
+    f = ring.sub(y, triple.b)
+    ef = ring.Ring64(jnp.stack([e.lo, f.lo], 1), jnp.stack([e.hi, f.hi], 1))
+    other = comm.swap(ef)                            # single exchange
+    e_open = ring.add(e, ring.Ring64(other.lo[:, 0], other.hi[:, 0]))
+    f_open = ring.add(f, ring.Ring64(other.lo[:, 1], other.hi[:, 1]))
+    z = ring.add(triple.c,
+                 ring.add(ring.mul(e_open, triple.b), ring.mul(f_open, triple.a)))
+    p0 = comm.party_is(0, z.lo)
+    corr = ring.mul(e_open, f_open)
+    return ring.Ring64(jnp.where(p0, ring.add(z, corr).lo, z.lo),
+                       jnp.where(p0, ring.add(z, corr).hi, z.hi))
+
+
+# ---------------------------------------------------------------------------
+# B2A of a single packed bit plane -> arithmetic shares of the bit
+# ---------------------------------------------------------------------------
+
+def b2a_bit(bits: jax.Array, triple: beaver.ArithTriple, comm) -> ring.Ring64:
+    """bits: (P, E) XOR shares in {0,1}. Returns Ring64 additive shares.
+
+    b = b0 xor b1 = b0 + b1 - 2*b0*b1; the cross term uses one Beaver mult
+    with X = (b0, 0), Y = (0, b1) as trivially-valid arithmetic shares.
+    """
+    zeros = jnp.zeros_like(bits)
+    p0 = comm.party_is(0, bits)
+    x = ring.Ring64(jnp.where(p0, bits, zeros), zeros)
+    y = ring.Ring64(jnp.where(p0, zeros, bits), zeros)
+    xy = beaver_mul(x, y, triple, comm)
+    s = ring.add(ring.Ring64(bits, zeros), ring.neg(ring.lshift(xy, 1)))
+    # NB: x + y == (b0, b1) == Ring64(bits, 0) summed across parties
+    return s
+
+
+# ---------------------------------------------------------------------------
+# DReLU / ReLU (exact and reduced-ring)
+# ---------------------------------------------------------------------------
+
+def drelu(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
+          k: int = 64, m: int = 0, cone: bool = False) -> ring.Ring64:
+    """Arithmetic shares of DReLU(x) evaluated on the reduced ring [k:m].
+
+    k = 64, m = 0 reproduces the exact CrypTen baseline; k - m << 64 is
+    HummingBird's approximation (Eq. 3).  x: Ring64 shares (P, E).
+    """
+    w = k - m
+    n = x.shape[-1]
+    if w <= 32:
+        v = ring.extract_bits(x, k, m)              # (P, E) uint32, local
+        planes = ring.bitplanes_u32(v, w)           # (w, P, E)
+    else:
+        planes = ring.extract_planes(x, k, m)       # (w, P, E)
+    planes = jnp.moveaxis(planes, 0, 1)             # (P, w, E)
+    packed = shares.pack_bits(planes)               # (P, w, W)
+    x0s, x1s = a2b_prepare(key, packed, comm)       # 1 round
+    sign_packed = adder_msb(x0s, x1s, triples, comm, w, cone=cone)
+    sign_bits = shares.unpack_bits(sign_packed, n)  # (P, E)
+    s = b2a_bit(sign_bits, triples.b2a, comm)       # shares of sign in {0,1}
+    one = ring.from_int32(jnp.ones((), jnp.int32))
+    p0 = comm.party_is(0, s.lo)
+    d = ring.Ring64(jnp.where(p0, ring.sub(one, s).lo, ring.neg(s).lo),
+                    jnp.where(p0, ring.sub(one, s).hi, ring.neg(s).hi))
+    return d
+
+
+def relu(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
+         k: int = 64, m: int = 0, cone: bool = False) -> ring.Ring64:
+    """ReLU(x) = x * DReLU(x[k:m])  (Eq. 3; Eq. 2 when k=64, m=0).
+
+    The final multiplication always uses the full-ring share x, only the
+    sign estimation is approximated - exactly the paper's formulation.
+    """
+    d = drelu(key, x, triples, comm, k, m, cone=cone)
+    return beaver_mul(x, d, triples.mult, comm)
+
+
+def n_rounds(w: int) -> int:
+    """Communication rounds for one ReLU: prep + init-AND + levels + B2A + mult."""
+    return 3 + (1 + beaver.n_levels(w) if w > 1 else 0)

@@ -1,0 +1,150 @@
+"""MPCTensor: the user-facing secret-shared tensor (CrypTen-equivalent).
+
+Carries Ring64 additive shares with a leading party dimension plus the
+fixed-point scale.  Linear ops with public weights are local (no
+communication); ReLU runs the GMW protocol with an optional HummingBird
+reduced-ring config.  The same object works on the sim backend (party dim
+materialised) and inside shard_map on the mesh backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import beaver, comm as comm_lib, fixed, gmw, ring, ring_linalg, shares
+from .hummingbird import HBLayer
+
+
+def encode_weights(w_f, frac_bits: int = fixed.DEFAULT_FRAC_BITS) -> jax.Array:
+    """Public float weights -> fixed-point int32 (|w * 2^f| < 2^31)."""
+    return jnp.round(jnp.asarray(w_f, jnp.float32) * (2.0 ** frac_bits)).astype(jnp.int32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class MPCTensor:
+    data: ring.Ring64            # shares, party dim leading
+    frac_bits: int = fixed.DEFAULT_FRAC_BITS
+
+    def tree_flatten(self):
+        return (self.data,), self.frac_bits
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    # -- construction / reveal ------------------------------------------------
+    @staticmethod
+    def from_plain(key, x_f: jax.Array, n_parties: int = 2,
+                   frac_bits: int = fixed.DEFAULT_FRAC_BITS) -> "MPCTensor":
+        return MPCTensor(shares.share(key, fixed.encode(x_f, frac_bits), n_parties),
+                         frac_bits)
+
+    def reveal(self) -> jax.Array:
+        return fixed.decode(shares.reconstruct(self.data), self.frac_bits)
+
+    def reveal_np(self) -> np.ndarray:
+        return fixed.decode_np(shares.reconstruct(self.data), self.frac_bits)
+
+    @property
+    def shape(self):
+        return self.data.shape[1:]          # without the party dim
+
+    # -- local linear ops ------------------------------------------------------
+    def __add__(self, other: "MPCTensor") -> "MPCTensor":
+        assert self.frac_bits == other.frac_bits
+        return MPCTensor(ring.add(self.data, other.data), self.frac_bits)
+
+    def __sub__(self, other: "MPCTensor") -> "MPCTensor":
+        assert self.frac_bits == other.frac_bits
+        return MPCTensor(ring.sub(self.data, other.data), self.frac_bits)
+
+    def add_public(self, b_f, comm=None) -> "MPCTensor":
+        """Add a public constant: only party 0 adds it to its share."""
+        comm = comm or comm_lib.SimComm()
+        enc = fixed.encode(jnp.broadcast_to(jnp.asarray(b_f, jnp.float32),
+                                            self.shape), self.frac_bits)
+        p0 = comm.party_is(0, self.data.lo)
+        zero = ring.zeros(self.shape)
+        lo = jnp.where(p0, enc.lo, zero.lo)
+        hi = jnp.where(p0, enc.hi, zero.hi)
+        return MPCTensor(ring.add(self.data, ring.Ring64(lo, hi)), self.frac_bits)
+
+    def truncate(self, n: Optional[int] = None) -> "MPCTensor":
+        """Fixed-point rescale: arithmetic shift of each signed share
+        (SecureML-style local truncation, +-1 LSB error, rare wrap)."""
+        n = self.frac_bits if n is None else n
+        return MPCTensor(ring.rshift_arith(self.data, n), self.frac_bits)
+
+    def mul_public(self, c_f) -> "MPCTensor":
+        w = encode_weights(c_f, self.frac_bits)
+        prod = ring.mul(self.data, ring.from_int32(jnp.broadcast_to(w, self.shape)))
+        return MPCTensor(prod, self.frac_bits).truncate()
+
+    def matmul_public(self, w_f: jax.Array) -> "MPCTensor":
+        """x @ W with public float weights [K, N]; local + truncation."""
+        w = encode_weights(w_f, self.frac_bits)
+        prod = ring_linalg.matmul_pub(self.data, w)
+        return MPCTensor(prod, self.frac_bits).truncate()
+
+    def conv2d_public(self, w_f: jax.Array, stride: int = 1,
+                      padding: int = 0) -> "MPCTensor":
+        """NCHW conv with public float weights [Cout, Cin, kh, kw]."""
+        w = encode_weights(w_f, self.frac_bits)
+        prod = ring_linalg.conv2d_pub(self.data, w, stride, padding)
+        return MPCTensor(prod, self.frac_bits).truncate()
+
+    def avg_pool(self, window: int) -> "MPCTensor":
+        """Non-overlapping average pooling on [..., C, H, W] (MPC-friendly
+        replacement for max pooling, as in the paper's §2.3 setup)."""
+        h, w = self.shape[-2], self.shape[-1]
+        oh, ow = h // window, w // window
+
+        def _pool(a):
+            a = a[..., : oh * window, : ow * window]
+            a = a.reshape(a.shape[:-2] + (oh, window, ow, window))
+            return a
+
+        lo, hi = _pool(self.data.lo), _pool(self.data.hi)
+        acc = ring.zeros(lo.shape[:-4] + (oh, ow))
+        for i in range(window):
+            for j in range(window):
+                acc = ring.add(acc, ring.Ring64(lo[..., :, i, :, j],
+                                                hi[..., :, i, :, j]))
+        summed = MPCTensor(acc, self.frac_bits)
+        return summed.mul_public(1.0 / (window * window))
+
+    def global_avg_pool(self) -> "MPCTensor":
+        """[..., C, H, W] -> [..., C] mean over spatial dims."""
+        h, w = self.shape[-2], self.shape[-1]
+        flat = self.data.reshape(self.data.shape[:-2] + (h * w,))
+        acc = ring.zeros(flat.shape[:-1])
+        for i in range(h * w):
+            acc = ring.add(acc, flat[..., i])
+        return MPCTensor(acc, self.frac_bits).mul_public(1.0 / (h * w))
+
+    def reshape(self, *shape) -> "MPCTensor":
+        return MPCTensor(self.data.reshape((self.data.shape[0],) + tuple(shape)),
+                         self.frac_bits)
+
+    # -- the nonlinear op ------------------------------------------------------
+    def relu(self, key, comm=None, hb: HBLayer = HBLayer(),
+             triples: Optional[beaver.ReluTriples] = None,
+             cone: bool = False) -> "MPCTensor":
+        """GMW ReLU; `hb` selects the HummingBird reduced ring (k, m);
+        cone=True uses the MSB-cone-pruned adder (beyond-paper)."""
+        comm = comm or comm_lib.SimComm()
+        n = int(np.prod(self.shape))
+        flat = self.data.reshape((self.data.shape[0], n))
+        if triples is None:
+            kt, key = jax.random.split(key)
+            triples = beaver.gen_relu_triples(kt, n, hb.width,
+                                              n_parties=self.data.shape[0],
+                                              cone=cone)
+        out = gmw.relu(key, flat, triples, comm, k=hb.k, m=hb.m, cone=cone)
+        out = out.reshape((self.data.shape[0],) + tuple(self.shape))
+        return MPCTensor(out, self.frac_bits)

@@ -1,0 +1,91 @@
+"""Secret sharing: arithmetic shares on Z/2^64 and packed binary shares.
+
+Arithmetic shares: <x>_0 + <x>_1 = x (mod 2^64), stored as Ring64 with a
+leading party dimension.
+
+Binary shares are *bit-sliced*: a w-bit shared value over E elements is
+stored as (party, w, W) uint32 where W = ceil(E/32) and word j of plane i
+packs the i-th bit of elements 32j..32j+31.  Every XOR/AND VPU op then
+processes 32 secret bits per lane — the TPU adaptation of the paper's
+bitpacking (§4.2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ring
+
+_U32 = jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# Arithmetic shares
+# ---------------------------------------------------------------------------
+
+def share(key, x: ring.Ring64, n_parties: int = 2) -> ring.Ring64:
+    """Split plaintext ring values into additive shares, party dim leading."""
+    masks = [ring.uniform(k, x.shape) for k in jax.random.split(key, n_parties - 1)]
+    first = x
+    for m in masks:
+        first = ring.sub(first, m)
+    los = jnp.stack([first.lo] + [m.lo for m in masks], axis=0)
+    his = jnp.stack([first.hi] + [m.hi for m in masks], axis=0)
+    return ring.Ring64(los, his)
+
+
+def reconstruct(xs: ring.Ring64) -> ring.Ring64:
+    """Sum shares over the leading party dimension."""
+    acc = xs[0]
+    for p in range(1, xs.shape[0]):
+        acc = ring.add(acc, xs[p])
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Bit packing (reference implementation; kernels/bitpack has the TPU kernel)
+# ---------------------------------------------------------------------------
+
+def packed_words(n_elements: int) -> int:
+    return (n_elements + 31) // 32
+
+
+def pack_bits(planes: jax.Array) -> jax.Array:
+    """(..., w, E) {0,1} uint32 -> (..., w, W) packed words (E padded)."""
+    e = planes.shape[-1]
+    w_words = packed_words(e)
+    pad = w_words * 32 - e
+    if pad:
+        planes = jnp.pad(planes, [(0, 0)] * (planes.ndim - 1) + [(0, pad)])
+    grouped = planes.reshape(planes.shape[:-1] + (w_words, 32)).astype(_U32)
+    shifts = jnp.arange(32, dtype=_U32)
+    return (grouped << shifts).sum(axis=-1, dtype=_U32)
+
+
+def unpack_bits(words: jax.Array, n_elements: int) -> jax.Array:
+    """(..., W) packed words -> (..., E) {0,1} uint32."""
+    shifts = jnp.arange(32, dtype=_U32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(words.shape[:-1] + (words.shape[-1] * 32,))
+    return flat[..., :n_elements]
+
+
+def xor_share_packed(key, words: jax.Array, n_parties: int = 2) -> jax.Array:
+    """XOR-share packed words; adds a leading party dimension."""
+    masks = [
+        jax.random.bits(k, words.shape, dtype=_U32)
+        for k in jax.random.split(key, n_parties - 1)
+    ]
+    first = words
+    for m in masks:
+        first = first ^ m
+    return jnp.stack([first] + masks, axis=0)
+
+
+def xor_reconstruct(ws: jax.Array) -> jax.Array:
+    out = ws[0]
+    for p in range(1, ws.shape[0]):
+        out = out ^ ws[p]
+    return out

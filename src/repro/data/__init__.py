@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipelines (tokens + images)."""
+from . import pipeline
+from .pipeline import ImagePipeline, TokenPipeline
+__all__ = ["pipeline", "ImagePipeline", "TokenPipeline"]

@@ -1,0 +1,12 @@
+"""TPU Pallas kernels for the paper's online-phase hot spots (§4.2):
+
+  bitpack     - pack/unpack reduced-ring bitplanes into dense wire words
+  gmw_round   - fused Beaver-AND + Kogge-Stone level local evaluation
+  ring_matmul - mod-2^64 matmul via balanced 8-bit planes on the MXU
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py is the jit'd wrapper
+that dispatches Pallas-on-TPU vs reference-on-CPU.
+"""
+from . import bitpack, gmw_round, ops, ref, ring_matmul
+
+__all__ = ["bitpack", "gmw_round", "ops", "ref", "ring_matmul"]

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused GMW Beaver-AND evaluation on packed words.
+
+After the (d, e) opening exchange, each party locally evaluates
+    z = c ^ (d & b) ^ (e & a) ^ (sel & d & e)
+over the packed bit-sliced planes (sel = all-ones on party 0).  Unfused,
+this chain is 6 elementwise HBM round-trips; the kernel evaluates it in one
+VMEM pass — the op is purely memory-bound, so fusion is the entire win
+(napkin: 6x HBM traffic -> 1x, bounded by 819 GB/s on v5e).
+
+Also provides the fused Kogge-Stone level update
+    g' = g ^ z_g ;  p' = z_p
+folded into the same pass when the AND outputs feed a carry level.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_U32 = jnp.uint32
+BLOCK = (8, 256)  # (plane, word) VMEM tile; word dim multiple of 128 lanes
+
+
+def _beaver_and_kernel(d_ref, e_ref, a_ref, b_ref, c_ref, sel_ref, out_ref):
+    d = d_ref[...]
+    e = e_ref[...]
+    z = c_ref[...] ^ (d & b_ref[...]) ^ (e & a_ref[...]) ^ (sel_ref[...] & d & e)
+    out_ref[...] = z
+
+
+def beaver_and_pallas(d_open, e_open, a, b, c, sel, *, interpret: bool = True,
+                      block=BLOCK) -> jax.Array:
+    """All inputs (P_planes, W) uint32, shapes padded to the block grid."""
+    planes, words = d_open.shape
+    grid = (planes // block[0], words // block[1])
+    spec = pl.BlockSpec(block, lambda i, j: (i, j))
+    return pl.pallas_call(
+        _beaver_and_kernel,
+        out_shape=jax.ShapeDtypeStruct((planes, words), _U32),
+        grid=grid,
+        in_specs=[spec] * 6,
+        out_specs=spec,
+        interpret=interpret,
+    )(d_open, e_open, a, b, c, sel)
+
+
+def _ks_level_kernel(g_ref, zg_ref, zp_ref, g_out, p_out):
+    g_out[...] = g_ref[...] ^ zg_ref[...]
+    p_out[...] = zp_ref[...]
+
+
+def ks_level_pallas(g, z_g, z_p, *, interpret: bool = True, block=BLOCK):
+    """Fused Kogge-Stone level combine: returns (g ^ z_g, z_p)."""
+    planes, words = g.shape
+    grid = (planes // block[0], words // block[1])
+    spec = pl.BlockSpec(block, lambda i, j: (i, j))
+    return pl.pallas_call(
+        _ks_level_kernel,
+        out_shape=(jax.ShapeDtypeStruct((planes, words), _U32),
+                   jax.ShapeDtypeStruct((planes, words), _U32)),
+        grid=grid,
+        in_specs=[spec] * 3,
+        out_specs=(spec, spec),
+        interpret=interpret,
+    )(g, z_g, z_p)

@@ -1,0 +1,98 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU the Pallas path runs compiled; elsewhere (this
+container is CPU) the pure-jnp reference is used unless
+``REPRO_FORCE_PALLAS_INTERPRET=1`` forces the interpret-mode kernel (tests
+do this explicitly for the allclose sweeps).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ring
+from . import bitpack as _bitpack
+from . import gmw_round as _gmw_round
+from . import ring_matmul as _ring_matmul
+from . import ref
+
+_U32 = jnp.uint32
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS_INTERPRET") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def pack(v: jax.Array, w: int) -> jax.Array:
+    """(E,) uint32 -> (w, ceil(E/32)) packed words."""
+    n_out = (v.shape[0] + 31) // 32
+    if _use_pallas():
+        vp = _pad_to(v, 0, 32 * _bitpack.BLOCK_WORDS)
+        bw = min(_bitpack.BLOCK_WORDS, vp.shape[0] // 32)
+        out = _bitpack.pack_pallas(vp, w, interpret=_interpret(), block_words=bw)
+    else:
+        vp = _pad_to(v, 0, 32)
+        out = ref.pack(vp, w)
+    return out[:, :n_out]
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def unpack(words: jax.Array, w: int, n_elements: int) -> jax.Array:
+    """(w, W) packed words -> (n_elements,) uint32."""
+    if _use_pallas():
+        wp = _pad_to(words, 1, _bitpack.BLOCK_WORDS)
+        bw = min(_bitpack.BLOCK_WORDS, wp.shape[1])
+        out = _bitpack.unpack_pallas(wp, w, interpret=_interpret(), block_words=bw)
+    else:
+        out = ref.unpack(words, w)
+    return out[:n_elements]
+
+
+@jax.jit
+def beaver_and(d_open, e_open, a, b, c, sel):
+    """Fused local Beaver-AND evaluation on packed (planes, W) words."""
+    if _use_pallas():
+        blk = _gmw_round.BLOCK
+        args = [d_open, e_open, a, b, c, jnp.broadcast_to(sel, d_open.shape)]
+        padded = [_pad_to(_pad_to(x, 0, blk[0]), 1, blk[1]) for x in args]
+        out = _gmw_round.beaver_and_pallas(*padded, interpret=_interpret())
+        return out[: d_open.shape[0], : d_open.shape[1]]
+    return ref.beaver_and(d_open, e_open, a, b, c, sel)
+
+
+@functools.partial(jax.jit, static_argnums=())
+def ring_matmul(x: ring.Ring64, w_i32: jax.Array) -> ring.Ring64:
+    """Ring64 [M, K] @ public int32 [K, N] -> Ring64 [M, N] (mod 2^64)."""
+    dx = ring.balanced_digits(x)            # (8, M, K)
+    dw = ring.balanced_digits_i32(w_i32)    # (5, K, N)
+    if _use_pallas():
+        bm, bk, bn = (8, 128, 128) if _interpret() else _ring_matmul.DEFAULT_BLOCK
+        m, k = x.shape
+        n = w_i32.shape[1]
+        dxp = _pad_to(_pad_to(dx, 1, bm), 2, bk)
+        dwp = _pad_to(_pad_to(dw, 1, bk), 2, bn)
+        lo, hi = _ring_matmul.ring_matmul_pallas(
+            dxp, dwp, block=(bm, bk, bn), interpret=_interpret())
+        return ring.Ring64(lo[:m, :n], hi[:m, :n])
+    lo, hi = ref.ring_matmul(dx, dw)
+    return ring.Ring64(lo, hi)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ring
+
+_U32 = jnp.uint32
+
+
+def pack(v: jax.Array, w: int) -> jax.Array:
+    """(E,) uint32 -> (w, E/32) packed words (E multiple of 32)."""
+    n_words = v.shape[0] // 32
+    grouped = v.reshape(n_words, 32)
+    shifts = jnp.arange(32, dtype=_U32)[None, :]
+    planes = []
+    for i in range(w):
+        bits = (grouped >> _U32(i)) & _U32(1)
+        planes.append((bits << shifts).sum(axis=-1, dtype=_U32))
+    return jnp.stack(planes, axis=0)
+
+
+def unpack(words: jax.Array, w: int) -> jax.Array:
+    """(w, W) -> (32*W,) uint32 values with w significant bits."""
+    shifts = jnp.arange(32, dtype=_U32)
+    acc = jnp.zeros((words.shape[1], 32), _U32)
+    for i in range(w):
+        bits = (words[i][:, None] >> shifts) & _U32(1)
+        acc = acc | (bits << _U32(i))
+    return acc.reshape(-1)
+
+
+def beaver_and(d_open, e_open, a, b, c, sel) -> jax.Array:
+    return c ^ (d_open & b) ^ (e_open & a) ^ (sel & d_open & e_open)
+
+
+def ks_level(g, z_g, z_p):
+    return g ^ z_g, z_p
+
+
+def ring_matmul(dx: jax.Array, dw: jax.Array):
+    """Digit-plane matmul oracle; same contraction as the kernel.
+
+    dx: (8, M, K) int8; dw: (5, K, N) int8 -> (lo, hi) uint32 [M, N].
+    """
+    prods = jnp.einsum("imk,jkn->ijmn", dx.astype(jnp.int8), dw.astype(jnp.int8),
+                       preferred_element_type=jnp.int32)
+    out = ring.zeros(prods.shape[2:])
+    for s in range(8):
+        acc = None
+        for i in range(8):
+            j = s - i
+            if 0 <= j < 5:
+                acc = prods[i, j] if acc is None else acc + prods[i, j]
+        if acc is None:
+            continue
+        lo = acc.astype(_U32)
+        hi = jnp.where(acc < 0, _U32(0xFFFFFFFF), _U32(0))
+        out = ring.add(out, ring.lshift(ring.Ring64(lo, hi), 8 * s))
+    return out.lo, out.hi

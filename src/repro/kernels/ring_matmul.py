@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: mod-2^64 matmul via balanced 8-bit digit planes.
+
+The MPC linear layers multiply Ring64 shares by public int32 fixed-point
+weights.  TPUs have no 64-bit integer MXU path, so the contraction is
+decomposed into signed 8-bit digit planes (see core/ring.py):
+
+    x = sum_i dx_i 2^(8i)  (8 planes, int8)     w = sum_j dw_j 2^(8j)  (5 planes)
+    x @ w mod 2^64 = sum_{s<8} ( sum_{i+j=s} dx_i @ dw_j ) << 8s
+
+Each dx_i @ dw_j is a native MXU s8 x s8 -> s32 matmul.  The kernel blocks
+(M, N, K) into VMEM tiles, keeps the 8 shifted accumulators in VMEM scratch
+across the K sweep, and recombines into (lo, hi) uint32 limbs with explicit
+carries in the epilogue.  MXU alignment: block dims are multiples of 128
+(tests use smaller tiles in interpret mode).
+
+int32 accumulator safety: |sum_s| <= 5 * K * 128 * 128, so K <= 26214 per
+call; ops.py chunks larger K and ring-adds the partials.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_U32 = jnp.uint32
+
+# (BM, BK, BN) VMEM tile; production TPU config uses (256, 512, 256)
+DEFAULT_BLOCK = (256, 512, 256)
+
+# (i, j) digit-plane pairs contributing to shift s = i + j (j < 5, s < 8)
+_PAIRS = [(i, j) for i in range(8) for j in range(5) if i + j < 8]
+
+
+def _add64(alo, ahi, blo, bhi):
+    lo = alo + blo
+    carry = (lo < alo).astype(_U32)
+    return lo, ahi + bhi + carry
+
+
+def _shift64(lo, hi, s_bits: int):
+    if s_bits == 0:
+        return lo, hi
+    if s_bits < 32:
+        return lo << s_bits, (hi << s_bits) | (lo >> (32 - s_bits))
+    if s_bits == 32:
+        return jnp.zeros_like(lo), lo
+    return jnp.zeros_like(lo), lo << (s_bits - 32)
+
+
+def _kernel(dx_ref, dw_ref, lo_ref, hi_ref, acc_ref, *, nk: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dx = dx_ref[...]   # (8, BM, BK) int8
+    dw = dw_ref[...]   # (5, BK, BN) int8
+    for s in range(8):
+        partial = None
+        for (i, j) in _PAIRS:
+            if i + j != s:
+                continue
+            prod = jax.lax.dot_general(
+                dx[i], dw[j], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            partial = prod if partial is None else partial + prod
+        if partial is not None:
+            acc_ref[s, :, :] += partial
+
+    @pl.when(k_step == nk - 1)
+    def _epilogue():
+        lo = jnp.zeros(lo_ref.shape, _U32)
+        hi = jnp.zeros(hi_ref.shape, _U32)
+        for s in range(8):
+            acc = acc_ref[s, :, :]
+            slo = acc.astype(_U32)
+            shi = jnp.where(acc < 0, _U32(0xFFFFFFFF), _U32(0))
+            slo, shi = _shift64(slo, shi, 8 * s)
+            lo, hi = _add64(lo, hi, slo, shi)
+        lo_ref[...] = lo
+        hi_ref[...] = hi
+
+
+def ring_matmul_pallas(dx: jax.Array, dw: jax.Array, *,
+                       block=DEFAULT_BLOCK, interpret: bool = True):
+    """dx: (8, M, K) int8 digit planes of the shares;
+    dw: (5, K, N) int8 digit planes of the public weights.
+    Returns (lo, hi) uint32 [M, N] = digits recombined mod 2^64.
+    M, K, N must be multiples of the block dims (ops.py pads)."""
+    _, m, k = dx.shape
+    _, _, n = dw.shape
+    bm, bk, bn = block
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=grid[2]),
+        out_shape=(jax.ShapeDtypeStruct((m, n), _U32),
+                   jax.ShapeDtypeStruct((m, n), _U32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((8, bm, bk), lambda im, in_, ik: (0, im, ik)),
+            pl.BlockSpec((5, bk, bn), lambda im, in_, ik: (0, ik, in_)),
+        ],
+        out_specs=(pl.BlockSpec((bm, bn), lambda im, in_, ik: (im, in_)),
+                   pl.BlockSpec((bm, bn), lambda im, in_, ik: (im, in_))),
+        scratch_shapes=[pltpu.VMEM((8, bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(dx, dw)

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state; the dry-run sets
+``--xla_force_host_platform_device_count=512`` before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mpc_mesh():
+    """MPC serving mesh: party = pod (2 non-colluding servers, each a
+    16x16 slice used as 256-way data parallelism over the request batch)."""
+    return jax.make_mesh((2, 256), ("party", "data"))
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,89 @@
+"""Assemble the EXPERIMENTS.md dry-run + roofline tables from results/."""
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _fmt(x, nd=3):
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        if x == 0:
+            return "0"
+        if abs(x) < 1e-3 or abs(x) >= 1e4:
+            return f"{x:.2e}"
+        return f"{x:.{nd}g}"
+    return str(x)
+
+
+def load_cells():
+    cells = []
+    for f in sorted(RESULTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        d["_file"] = f.stem
+        cells.append(d)
+    return cells
+
+
+def dryrun_table(cells, multi_pod):
+    lines = ["| arch | shape | status | compile_s | HBM/dev (GB) | collectives |",
+             "|---|---|---|---|---|---|"]
+    for d in cells:
+        if d.get("multi_pod") != multi_pod or "-mpc-" in d.get("arch", ""):
+            continue
+        mem = d.get("memory", {})
+        tot = mem.get("total_bytes")
+        colls = d.get("hlo", {}).get("collectives", {})
+        coll_str = ",".join(f"{k.split('-')[-1][:4]}:{v}"
+                            for k, v in sorted(colls.items())) or "-"
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['status']}"
+            f"{(' (' + d.get('reason', '')[:40] + ')') if d['status'] == 'skipped' else ''} "
+            f"| {_fmt(d.get('compile_s'))} "
+            f"| {_fmt(tot / 1e9 if tot else None)} | {coll_str} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells):
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+             "| MODEL/HLO flops | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for d in cells:
+        if d.get("multi_pod") or d.get("status") != "ok" \
+                or "-mpc-" in d.get("arch", ""):
+            continue
+        r = d.get("roofline", {})
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {_fmt(r.get('compute_s'))} "
+            f"| {_fmt(r.get('memory_s'))} | {_fmt(r.get('collective_s'))} "
+            f"| {r.get('dominant', '-').replace('_s', '')} "
+            f"| {_fmt(r.get('useful_flops_ratio'))} "
+            f"| {_fmt(r.get('roofline_fraction'))} |")
+    return "\n".join(lines)
+
+
+def mpc_table(cells):
+    lines = ["| config | collective B/dev | memory_s | collective_s | dominant |",
+             "|---|---|---|---|---|"]
+    for d in cells:
+        if "-mpc-" not in d.get("arch", "") or d.get("status") != "ok":
+            continue
+        r = d.get("roofline", {})
+        cb = d.get("hlo", {}).get("collective_bytes")
+        lines.append(f"| {d['arch']} | {_fmt(cb)} | {_fmt(r.get('memory_s'))} "
+                     f"| {_fmt(r.get('collective_s'))} "
+                     f"| {r.get('dominant', '-').replace('_s', '')} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print("## Single-pod (16x16)\n")
+    print(dryrun_table(cells, False))
+    print("\n## Multi-pod (2x16x16)\n")
+    print(dryrun_table(cells, True))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(cells))
+    print("\n## MPC serving\n")
+    print(mpc_table(cells))

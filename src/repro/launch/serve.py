@@ -1,0 +1,125 @@
+"""Serving steps: LM prefill / decode + MPC private inference (the paper).
+
+LM serving lowers ``prefill_step`` for prefill shapes and ``serve_step``
+(one new token against a seq_len KV/SSM cache) for decode shapes, exactly
+as the brief specifies.
+
+MPC serving runs the GMW protocol with the *party dimension sharded over
+the mesh* ("party" = pod): every protocol exchange (the sim backend's
+party-flip) lowers to a collective-permute between the two 256-chip
+parties, so the paper's communication reduction is directly visible in the
+HLO collective bytes.  Beaver triples enter as step inputs (offline TTP,
+matching the paper's evaluation assumptions).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.resnet import ResNetConfig
+from repro.core import MPCTensor, beaver, comm as comm_lib, fixed, ring
+from repro.core.hummingbird import HBConfig
+from repro.models import encdec, lm, resnet
+
+
+def make_decode_step(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        def step(params, token, cache, pos):
+            return encdec.decode_step(params, token, cache, pos, cfg)
+    else:
+        def step(params, token, cache, pos):
+            return lm.decode_step(params, token, cache, pos, cfg)
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int):
+    if cfg.family == "encdec":
+        def step(params, src_embeds):
+            batch = src_embeds.shape[0]
+            return encdec.prefill(params, src_embeds, cfg, batch, max_len)
+    else:
+        def step(params, tokens, frontend_embeds=None):
+            return lm.prefill(params, tokens, cfg, max_len,
+                              frontend_embeds=frontend_embeds)
+    return step
+
+
+def greedy_decode_loop(params, cfg: ArchConfig, cache, first_token,
+                       start_pos: int, n_steps: int):
+    """Reference serving loop (used by examples + tests)."""
+    step = make_decode_step(cfg)
+
+    def body(carry, _):
+        token, cache, pos = carry
+        logits, cache = step(params, token, cache, pos)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(token.dtype)[:, None]
+        return (nxt, cache, pos + 1), nxt[:, 0]
+
+    (_, cache, _), tokens = jax.lax.scan(
+        body, (first_token, cache, jnp.asarray(start_pos, jnp.int32)),
+        None, length=n_steps)
+    return tokens.T, cache
+
+
+# ---------------------------------------------------------------------------
+# MPC private inference (ResNet, the paper's workload)
+# ---------------------------------------------------------------------------
+
+def make_mpc_serve_step(rcfg: ResNetConfig, hb: Optional[HBConfig],
+                        cone: bool = False):
+    """Returns step(params, lo, hi, triples, key) -> (lo, hi) logits shares.
+
+    lo/hi: Ring64 limbs of the input shares, shape (2, B, 3, H, W), party
+    dim sharded over the mesh's party/pod axis by the caller's in_shardings.
+    """
+    cm = comm_lib.SimComm()  # party dim materialised; XLA shards it
+
+    def step(params, lo, hi, triples, key):
+        x = MPCTensor(ring.Ring64(lo, hi))
+        out = resnet.mpc_apply(params, x, rcfg, key, hb=hb, comm=cm,
+                               triples=triples, cone=cone)
+        return out.data.lo, out.data.hi
+
+    return step
+
+
+def mpc_input_specs(rcfg: ResNetConfig, batch: int, mesh,
+                    hb: Optional[HBConfig], cone: bool = False):
+    """ShapeDtypeStructs for the MPC dry-run (no allocation)."""
+    party_axis = "party" if "party" in mesh.axis_names else "pod"
+    data_axis = "data"
+    hw = rcfg.in_hw
+    share_sh = NamedSharding(mesh, P(party_axis, data_axis))
+    lo = jax.ShapeDtypeStruct((2, batch, 3, hw, hw), jnp.uint32, sharding=share_sh)
+    hi = jax.ShapeDtypeStruct((2, batch, 3, hw, hw), jnp.uint32, sharding=share_sh)
+
+    params = jax.eval_shape(lambda k: resnet.init(k, rcfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    rep = NamedSharding(mesh, P())
+    params = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep), params)
+
+    plan = resnet.relu_plan(params, rcfg, batch)
+    triples = jax.eval_shape(
+        lambda k: resnet.gen_mpc_triples(k, plan, hb, rcfg, cone=cone),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def triple_sharding(path, leaf):
+        # party dim is axis 0 except bin_levels members (stacked L first)
+        path_str = "/".join(str(getattr(p, "key", getattr(p, "name", p)))
+                            for p in path)
+        party_dim = 1 if "bin_levels" in path_str else 0
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) > party_dim and leaf.shape[party_dim] == 2:
+            spec[party_dim] = party_axis
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, P(*spec)))
+
+    triples = jax.tree_util.tree_map_with_path(triple_sharding, triples)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rep)
+    return params, lo, hi, triples, key

@@ -1,0 +1,122 @@
+"""ShapeDtypeStruct input builders for every (arch x shape x mesh) cell.
+
+Nothing here allocates device memory: params, optimizer states, caches and
+batches are all abstract (eval_shape) with NamedShardings attached from
+the partition rules, ready for ``jit(...).lower(...)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.runtime import sharding
+from repro.train import optimizer as opt_lib
+from repro.launch import train as train_lib
+
+_KEY = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def _attach(tree, shardings):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree, shardings)
+
+
+def abstract_params(cfg: ArchConfig, mesh, mode: str):
+    init_fn = encdec.init if cfg.family == "encdec" else lm.init
+    shapes = jax.eval_shape(functools.partial(init_fn, cfg=cfg), _KEY)
+    if mode == "train":
+        shapes = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), shapes)
+    return _attach(shapes, sharding.param_shardings(shapes, mesh, mode, cfg))
+
+
+def abstract_train_state(cfg: ArchConfig, mesh, optimizer):
+    params = abstract_params(cfg, mesh, "train")
+    opt_shapes = jax.eval_shape(optimizer.init, params)
+    opt = _attach(opt_shapes,
+                  sharding.param_shardings(opt_shapes, mesh, "train", cfg))
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=sharding.replicated(mesh))
+    return train_lib.TrainState(params=params, opt_state=opt, step=step)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    dp = NamedSharding(mesh, sharding.batch_spec(b, mesh, extra_dims=1))
+    dp2 = NamedSharding(mesh, sharding.batch_spec(b, mesh, extra_dims=2))
+    batch: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), jnp.bfloat16, sharding=dp2)
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=dp)
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=dp)
+        return batch
+    s_tok = s - (cfg.n_frontend_tokens if cfg.frontend != "none" else 0)
+    batch["tokens"] = jax.ShapeDtypeStruct((b, s_tok), jnp.int32, sharding=dp)
+    batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=dp)
+    if cfg.frontend != "none":
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16, sharding=dp2)
+    return batch
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    b, max_len = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        shapes = jax.eval_shape(
+            functools.partial(encdec.init_cache, cfg, b, max_len, max_len))
+    else:
+        shapes = jax.eval_shape(functools.partial(lm.init_cache, cfg, b, max_len))
+    return _attach(shapes, sharding.cache_shardings(shapes, cfg, mesh))
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    b = shape.global_batch
+    params = abstract_params(cfg, mesh, "serve")
+    token = jax.ShapeDtypeStruct(
+        (b, 1), jnp.int32,
+        sharding=NamedSharding(mesh, sharding.batch_spec(b, mesh)))
+    cache = abstract_cache(cfg, shape, mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=sharding.replicated(mesh))
+    return params, token, cache, pos
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    params = abstract_params(cfg, mesh, "serve")
+    dp = NamedSharding(mesh, sharding.batch_spec(b, mesh, extra_dims=1))
+    dp2 = NamedSharding(mesh, sharding.batch_spec(b, mesh, extra_dims=2))
+    if cfg.family == "encdec":
+        src = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16,
+                                   sharding=dp2)
+        return params, (src,), {}
+    s_tok = s - (cfg.n_frontend_tokens if cfg.frontend != "none" else 0)
+    tokens = jax.ShapeDtypeStruct((b, s_tok), jnp.int32, sharding=dp)
+    kwargs = {}
+    if cfg.frontend != "none":
+        kwargs["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16, sharding=dp2)
+    return params, (tokens,), kwargs
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                optimizer: Optional[Any] = None):
+    """Everything dryrun needs for one cell: (fn_args, fn_kwargs)."""
+    if shape.kind == "train":
+        optimizer = optimizer or opt_lib.AdamW()
+        state = abstract_train_state(cfg, mesh, optimizer)
+        batch = train_batch_specs(cfg, shape, mesh)
+        return (state, batch), {}
+    if shape.kind == "prefill":
+        params, args, kwargs = prefill_input_specs(cfg, shape, mesh)
+        return (params,) + args, kwargs
+    params, token, cache, pos = decode_input_specs(cfg, shape, mesh)
+    return (params, token, cache, pos), {}

@@ -1,0 +1,116 @@
+"""Distributed train step: FSDP x TP, mixed precision, remat, microbatching.
+
+Mixed precision doubles as gradient compression: master params live in f32
+inside the optimizer, compute runs in the config dtype (bf16), so the DP
+gradient reductions move bf16 — half the collective bytes of an f32 setup
+— while the f32 master copy provides the error-feedback accumulator.
+Microbatching (gradient accumulation) runs as a scan so the compiled HLO
+stays compact; remat policy comes from the arch config.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, lm
+from repro.nn import moe as moe_lib
+from repro.train import optimizer as opt_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any          # f32 master copy
+    opt_state: Any
+    step: jax.Array
+
+
+def init_state(key, cfg: ArchConfig, optimizer) -> TrainState:
+    init_fn = encdec.init if cfg.family == "encdec" else lm.init
+    params = init_fn(key, cfg)
+    params = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    return TrainState(params=params, opt_state=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _compute_params(params, cfg: ArchConfig):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return jax.tree_util.tree_map(lambda p: p.astype(dt), params)
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ArchConfig):
+    """Next-token cross entropy; labels < 0 are masked (frontend positions)."""
+    p = _compute_params(params, cfg)
+    if cfg.family == "encdec":
+        logits = encdec.apply(p, batch["src_embeds"], batch["tokens"], cfg)
+    else:
+        logits = lm.apply(p, batch["tokens"], cfg,
+                          frontend_embeds=batch.get("frontend"))
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    safe = jnp.maximum(labels, 0)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    if cfg.family == "moe":
+        aux = _moe_aux(p, batch, cfg)
+        loss = loss + 0.01 * aux
+    return loss
+
+
+def _moe_aux(params, batch, cfg):
+    # router balance on the embedded tokens of the first layer (cheap proxy
+    # of the per-layer aux sum; full version accumulates inside the scan)
+    from repro.nn import common
+    h = common.embed(params["embed"], batch["tokens"])
+    layer0 = jax.tree_util.tree_map(lambda t: t[0], params["layers"])
+    return moe_lib.moe_aux_loss(layer0["moe"], h, n_experts=cfg.n_experts)
+
+
+def make_train_step(cfg: ArchConfig, optimizer, n_microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch):
+        if n_microbatches > 1:
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_microbatches,
+                                     x.shape[0] // n_microbatches) + x.shape[1:]),
+                batch)
+
+            def acc_body(acc, one):
+                l, g = jax.value_and_grad(loss_fn)(state.params, one, cfg)
+                return (acc[0] + l,
+                        jax.tree_util.tree_map(jnp.add, acc[1], g)), None
+
+            # grads follow the master-param dtype (the bf16 compute cast's
+            # transpose converts cotangents back to f32 at the boundary)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, p.dtype), state.params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros(()), zero_g), mb)
+            loss = loss_sum / n_microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / n_microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch, cfg)
+
+        new_params, new_opt, info = optimizer.update(
+            grads, state.opt_state, state.params, state.step)
+        metrics = {"loss": loss, **info}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def shift_labels(tokens: jax.Array, pad_prefix: int = 0) -> jax.Array:
+    """Next-token labels; -1 masks the final position and any prefix."""
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((tokens.shape[0], 1), -1, tokens.dtype)], axis=1)
+    if pad_prefix:
+        prefix = jnp.full((tokens.shape[0], pad_prefix), -1, tokens.dtype)
+        labels = jnp.concatenate([prefix, labels], axis=1)
+    return labels

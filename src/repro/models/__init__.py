@@ -1,0 +1,3 @@
+"""Model zoo: unified LM (dense/MoE/SSM/hybrid/VLM), enc-dec, ResNet."""
+from . import encdec, lm, resnet
+__all__ = ["encdec", "lm", "resnet"]

@@ -1,0 +1,219 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a stub per the brief: the encoder consumes
+precomputed frame embeddings (B, S_src, d_model).  The decoder is a
+standard causal transformer with cross-attention into the encoder memory;
+its FFN uses ReLU (the one assigned arch where HummingBird's technique is
+*directly* applicable, see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import attention, common
+from repro.models.lm import padded_vocab
+
+
+def _norm_init(cfg, d):
+    return (common.layernorm_init(d) if cfg.norm == "layernorm"
+            else common.rmsnorm_init(d))
+
+
+def _norm(cfg, p, x):
+    return (common.layernorm(p, x) if cfg.norm == "layernorm"
+            else common.rmsnorm(p, x))
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _sin_posenc(s, d, dtype):
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    pe = jnp.zeros((s, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return pe.astype(dtype)
+
+
+def _enc_layer_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {
+        "ln1": _norm_init(cfg, d),
+        "attn": attention.attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.resolved_head_dim, dtype=_dtype(cfg)),
+        "ln2": _norm_init(cfg, d),
+        "mlp": common.mlp_init(ks[1], d, cfg.d_ff, cfg.gated_mlp, _dtype(cfg)),
+    }
+
+
+def _dec_layer_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = _enc_layer_init(ks[0], cfg)
+    p["ln_x"] = _norm_init(cfg, d)
+    p["xattn"] = attention.attn_init(ks[1], d, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.resolved_head_dim, dtype=_dtype(cfg))
+    return p
+
+
+def init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": common.embed_init(ks[2], padded_vocab(cfg), cfg.d_model, _dtype(cfg)),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "enc_norm": _norm_init(cfg, cfg.d_model),
+        "final_norm": _norm_init(cfg, cfg.d_model),
+        "lm_head": common.dense_init(ks[3], cfg.d_model, padded_vocab(cfg), _dtype(cfg)),
+    }
+
+
+def _self_attn_full(cfg, p, x, causal: bool):
+    b, s, _ = x.shape
+    q, k, v = attention._project_qkv(
+        p, x, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim,
+        jnp.arange(s)[None, :], cfg.rope_theta)
+    if causal:
+        o = attention.flash_attention(q, k, v, q_offset=0,
+                                      chunk_q=cfg.attn_chunk_q,
+                                      chunk_k=cfg.attn_chunk_k)
+    else:
+        o = _bidir_attention(q, k, v)
+    return common.dense(p["wo"], o.reshape(b, s, -1))
+
+
+def _bidir_attention(q, k, v):
+    b, s, h, dh = q.shape
+    n_kv = k.shape[2]
+    g = h // n_kv
+    qh = q.reshape(b, s, n_kv, g, dh).astype(jnp.float32)
+    sc = jnp.einsum("bqkgd,bskd->bkgqs", qh, k.astype(jnp.float32)) * dh ** -0.5
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def _cross_attn(cfg, p, x, mem_k, mem_v):
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = common.dense(p["wq"], x).reshape(b, s, cfg.n_heads, dh)
+    g = cfg.n_heads // cfg.n_kv_heads
+    qh = q.reshape(b, s, cfg.n_kv_heads, g, dh).astype(jnp.float32)
+    sc = jnp.einsum("bqkgd,bskd->bkgqs", qh,
+                    mem_k.astype(jnp.float32)) * dh ** -0.5
+    pr = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pr, mem_v.astype(jnp.float32))
+    o = o.reshape(b, s, cfg.n_heads * dh).astype(x.dtype)
+    return common.dense(p["wo"], o)
+
+
+def encode(params, src_embeds, cfg: ArchConfig):
+    """src_embeds: (B, S_src, D) stub frame embeddings -> encoder memory."""
+    h = src_embeds + _sin_posenc(src_embeds.shape[1], cfg.d_model,
+                                 src_embeds.dtype)
+
+    def body(carry, layer_p):
+        x = _norm(cfg, layer_p["ln1"], carry)
+        a = _self_attn_full(cfg, layer_p["attn"], x, causal=False)
+        h2 = carry + a
+        f = common.mlp(layer_p["mlp"], _norm(cfg, layer_p["ln2"], h2), cfg.act)
+        return h2 + f, None
+
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return _norm(cfg, params["enc_norm"], h)
+
+
+def _memory_kv(params, memory, cfg):
+    """Precompute per-layer cross-attention K/V from the encoder memory."""
+    b, s, _ = memory.shape
+    dh = cfg.resolved_head_dim
+
+    def per_layer(layer_p):
+        k = common.dense(layer_p["xattn"]["wk"], memory).reshape(
+            b, s, cfg.n_kv_heads, dh)
+        v = common.dense(layer_p["xattn"]["wv"], memory).reshape(
+            b, s, cfg.n_kv_heads, dh)
+        return k, v
+
+    return jax.vmap(per_layer)(params["dec_layers"])
+
+
+def apply(params, src_embeds, tgt_tokens, cfg: ArchConfig):
+    """Training forward: (B,S_src,D) embeds + (B,S_tgt) ids -> logits."""
+    memory = encode(params, src_embeds, cfg)
+    mem_k, mem_v = _memory_kv(params, memory, cfg)
+    h = common.embed(params["embed"], tgt_tokens)
+    h = h + _sin_posenc(h.shape[1], cfg.d_model, h.dtype)
+
+    def body(carry, xs):
+        layer_p, mk, mv = xs
+        x = _norm(cfg, layer_p["ln1"], carry)
+        h2 = carry + _self_attn_full(cfg, layer_p["attn"], x, causal=True)
+        x = _norm(cfg, layer_p["ln_x"], h2)
+        h3 = h2 + _cross_attn(cfg, layer_p["xattn"], x, mk, mv)
+        f = common.mlp(layer_p["mlp"], _norm(cfg, layer_p["ln2"], h3), cfg.act)
+        return h3 + f, None
+
+    h, _ = jax.lax.scan(body, h, (params["dec_layers"], mem_k, mem_v))
+    h = _norm(cfg, params["final_norm"], h)
+    return common.dense(params["lm_head"], h)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, src_len: int):
+    kv = attention.init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim)
+    dh = cfg.resolved_head_dim
+    return {
+        "self_kv": jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t, (cfg.n_layers,) + t.shape).copy(), kv),
+        "mem_k": jnp.zeros((cfg.n_layers, batch, src_len, cfg.n_kv_heads, dh),
+                           jnp.bfloat16),
+        "mem_v": jnp.zeros((cfg.n_layers, batch, src_len, cfg.n_kv_heads, dh),
+                           jnp.bfloat16),
+    }
+
+
+def prefill(params, src_embeds, cfg: ArchConfig, batch: int, max_len: int):
+    """Encode source and build the decoder cache (cross K/V + empty self)."""
+    memory = encode(params, src_embeds, cfg)
+    mem_k, mem_v = _memory_kv(params, memory, cfg)
+    cache = init_cache(cfg, batch, max_len, src_embeds.shape[1])
+    cache["mem_k"] = mem_k.astype(jnp.bfloat16)
+    cache["mem_v"] = mem_v.astype(jnp.bfloat16)
+    return cache
+
+
+def decode_step(params, token, cache, pos, cfg: ArchConfig):
+    h = common.embed(params["embed"], token)
+    h = h + jax.lax.dynamic_slice_in_dim(
+        _sin_posenc(cache["self_kv"]["k"].shape[2], cfg.d_model, h.dtype),
+        pos, 1, axis=0)[None, 0]
+
+    def body(carry, xs):
+        layer_p, kv, mk, mv = xs
+        x = _norm(cfg, layer_p["ln1"], carry)
+        a, kv2 = attention.attention_decode(
+            layer_p["attn"], x, kv, pos, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta)
+        h2 = carry + a
+        x = _norm(cfg, layer_p["ln_x"], h2)
+        h3 = h2 + _cross_attn(cfg, layer_p["xattn"], x, mk, mv)
+        f = common.mlp(layer_p["mlp"], _norm(cfg, layer_p["ln2"], h3), cfg.act)
+        return h3 + f, kv2
+
+    h, new_kv = jax.lax.scan(
+        body, h, (params["dec_layers"], cache["self_kv"],
+                  cache["mem_k"], cache["mem_v"]))
+    cache = dict(cache, self_kv=new_kv)
+    h = _norm(cfg, params["final_norm"], h)
+    return common.dense(params["lm_head"], h), cache

@@ -1,0 +1,425 @@
+"""Unified decoder LM covering dense / MoE / SSM / hybrid / VLM families.
+
+Layers are stacked (leading L axis) and consumed by ``lax.scan`` so the HLO
+stays compact for the 512-device dry-run compiles; per-layer specialisation
+(gemma2 local/global alternation) uses traced masks, not control flow.
+Hybrid (zamba2) splits the stack into ``attn_every``-sized segments: a
+*shared* attention block (one param set, the zamba2 trick) runs between
+segment scans so its KV cache only exists for n_layers/attn_every slots.
+
+Modes:
+  apply        - full-sequence forward (training / eval)
+  prefill      - forward + KV/SSM cache construction (serving)
+  decode_step  - one token with cache update (serving)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import attention, common, moe as moe_lib, ssm
+from repro.runtime import constraints
+
+BIG_WINDOW = 1 << 30
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    """Vocab rounded up to a multiple of 16 so the TP axis always divides
+    the embedding/logits dim (only seamless's 256206 actually pads)."""
+    return -(-cfg.vocab // 16) * 16
+
+
+def _norm_init(cfg, d):
+    return (common.layernorm_init(d) if cfg.norm == "layernorm"
+            else common.rmsnorm_init(d))
+
+
+def _norm(cfg, p, x):
+    return (common.layernorm(p, x) if cfg.norm == "layernorm"
+            else common.rmsnorm(p, x))
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": _norm_init(cfg, d)}
+    if cfg.family in ("dense", "vlm"):
+        p["attn"] = attention.attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.resolved_head_dim, cfg.qkv_bias, dt)
+        p["ln2"] = _norm_init(cfg, d)
+        p["mlp"] = common.mlp_init(ks[1], d, cfg.d_ff, cfg.gated_mlp, dt)
+    elif cfg.family == "moe":
+        p["attn"] = attention.attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.resolved_head_dim, cfg.qkv_bias, dt)
+        p["ln2"] = _norm_init(cfg, d)
+        p["moe"] = moe_lib.moe_init(ks[1], d, cfg.d_ff, cfg.n_experts,
+                                    cfg.gated_mlp, dt)
+    elif cfg.family == "ssm":
+        p["mamba"] = ssm.mamba1_init(ks[0], d, cfg.ssm_state, cfg.ssm_expand,
+                                     dtype=dt)
+    elif cfg.family == "hybrid":
+        p["mamba"] = ssm.mamba2_init(ks[0], d, cfg.ssm_state,
+                                     cfg.mamba2_head_dim, cfg.ssm_expand, dt)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def init(key, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    params = {
+        "embed": common.embed_init(ks[1], padded_vocab(cfg), cfg.d_model, dt),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys),
+        "final_norm": _norm_init(cfg, cfg.d_model),
+        "lm_head": common.dense_init(ks[2], cfg.d_model, padded_vocab(cfg), dt),
+    }
+    if cfg.family == "hybrid" and cfg.attn_every:
+        params["shared_attn"] = {
+            "ln": _norm_init(cfg, cfg.d_model),
+            "attn": attention.attn_init(ks[3], cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.resolved_head_dim,
+                                        cfg.qkv_bias, dt),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _layer_window(cfg: ArchConfig, idx):
+    """Traced effective attention window for layer `idx` (None = global)."""
+    if cfg.local_global_period:
+        is_local = (idx % cfg.local_global_period) == 0
+        return jnp.where(is_local, cfg.sliding_window, BIG_WINDOW)
+    if cfg.sliding_window:
+        return cfg.sliding_window
+    return None
+
+
+def _attn_mlp_block(cfg: ArchConfig, p, h, idx):
+    window = _layer_window(cfg, idx)
+    a = attention.attention(
+        p["attn"], _norm(cfg, p["ln1"], h), **_attn_kwargs(cfg), window=window)
+    h = h + a
+    if cfg.family == "moe":
+        f = moe_lib.moe(p["moe"], _norm(cfg, p["ln2"], h),
+                        n_experts=cfg.n_experts, top_k=cfg.top_k,
+                        capacity_factor=cfg.moe_capacity_factor,
+                        act_name=cfg.act)
+    else:
+        f = common.mlp(p["mlp"], _norm(cfg, p["ln2"], h), cfg.act)
+    return h + f
+
+
+def _attn_kwargs(cfg: ArchConfig):
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                cap=cfg.attn_softcap, chunk_q=cfg.attn_chunk_q,
+                chunk_k=cfg.attn_chunk_k)
+
+
+def _mamba_block(cfg: ArchConfig, p, h):
+    x = _norm(cfg, p["ln1"], h)
+    if cfg.mamba_version == 1:
+        return h + ssm.mamba1(p["mamba"], x, n_state=cfg.ssm_state,
+                              chunk=cfg.ssm_chunk)
+    return h + ssm.mamba2(p["mamba"], x, n_state=cfg.ssm_state,
+                          head_dim=cfg.mamba2_head_dim, chunk=cfg.ssm_chunk)
+
+
+def _maybe_remat(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = {
+        "full": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        # save every dot output: the backward never re-runs forward
+        # collectives (EXPERIMENTS.md §Perf iteration A)
+        "dots_all": jax.checkpoint_policies.dots_saveable,
+    }[cfg.remat]
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, tokens, frontend_embeds):
+    h = common.embed(params["embed"], tokens)
+    if cfg.frontend != "none":
+        assert frontend_embeds is not None, "VLM/audio arch needs stub embeds"
+        h = jnp.concatenate([frontend_embeds.astype(h.dtype), h], axis=1)
+    # residual stream: batch over dp, replicated over model (Megatron TP)
+    return constraints.shard(h, "dp", None, None)
+
+
+def apply(params, tokens, cfg: ArchConfig, frontend_embeds=None):
+    """tokens: (B, S_tok) -> logits (B, S_total, vocab)."""
+    h = _embed_inputs(params, cfg, tokens, frontend_embeds)
+
+    if cfg.family == "hybrid" and cfg.attn_every:
+        h = _hybrid_forward(params, h, cfg)
+    else:
+        def body(carry, xs):
+            layer_p, idx = xs
+            if cfg.family in ("dense", "moe", "vlm"):
+                out = _attn_mlp_block(cfg, layer_p, carry, idx)
+            else:
+                out = _mamba_block(cfg, layer_p, carry)
+            return constraints.shard(out, "dp", None, None), None
+
+        h, _ = jax.lax.scan(_maybe_remat(cfg, body), h,
+                            (params["layers"], jnp.arange(cfg.n_layers)))
+
+    h = _norm(cfg, params["final_norm"], h)
+    logits = common.dense(params["lm_head"], h)
+    return common.softcap(logits, cfg.logit_softcap)
+
+
+def _hybrid_forward(params, h, cfg: ArchConfig):
+    """zamba2: shared attention block between segments of mamba2 layers."""
+    per = cfg.attn_every
+    n_seg = (cfg.n_layers + per - 1) // per
+    sa = params["shared_attn"]
+
+    def seg_body(carry, layer_p):
+        return _mamba_block(cfg, layer_p, carry), None
+
+    for seg in range(n_seg):
+        a = attention.attention(sa["attn"], _norm(cfg, sa["ln"], h),
+                                **_attn_kwargs(cfg))
+        h = h + a
+        lo, hi = seg * per, min((seg + 1) * per, cfg.n_layers)
+        seg_params = jax.tree_util.tree_map(lambda t: t[lo:hi], params["layers"])
+        h, _ = jax.lax.scan(_maybe_remat(cfg, seg_body), h, seg_params)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Abstract cache pytree (shapes only resolved on first use)."""
+    dt = jnp.bfloat16
+    if cfg.family in ("dense", "moe", "vlm"):
+        one = attention.init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                      cfg.resolved_head_dim, dt)
+        return {"kv": jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t, (cfg.n_layers,) + t.shape).copy(), one)}
+    if cfg.family == "ssm":
+        di = cfg.ssm_expand * cfg.d_model
+        one = ssm.mamba1_init_state(batch, di, cfg.ssm_state)
+        return {"ssm": jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t, (cfg.n_layers,) + t.shape).copy(), one)}
+    if cfg.family == "hybrid":
+        di = cfg.ssm_expand * cfg.d_model
+        one = ssm.mamba2_init_state(batch, di, cfg.ssm_state, cfg.mamba2_head_dim)
+        states = jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t, (cfg.n_layers,) + t.shape).copy(), one)
+        n_seg = (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+        kv = attention.init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                     cfg.resolved_head_dim, dt)
+        kv = jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t, (n_seg,) + t.shape).copy(), kv)
+        return {"ssm": states, "kv": kv}
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, token, cache, pos, cfg: ArchConfig):
+    """token: (B, 1) ids; pos: scalar int32 position. Returns (logits, cache)."""
+    h = common.embed(params["embed"], token)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            layer_p, layer_cache, idx = xs
+            window = _layer_window(cfg, idx)
+            x = _norm(cfg, layer_p["ln1"], carry)
+            a, new_cache = attention.attention_decode(
+                layer_p["attn"], x, layer_cache, pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                rope_theta=cfg.rope_theta, window=window,
+                cap=cfg.attn_softcap)
+            h2 = carry + a
+            if cfg.family == "moe":
+                f = moe_lib.moe(layer_p["moe"], _norm(cfg, layer_p["ln2"], h2),
+                                n_experts=cfg.n_experts, top_k=cfg.top_k,
+                                capacity_factor=cfg.moe_capacity_factor,
+                                act_name=cfg.act)
+            else:
+                f = common.mlp(layer_p["mlp"], _norm(cfg, layer_p["ln2"], h2),
+                               cfg.act)
+            return h2 + f, new_cache
+
+        h, new_kv = jax.lax.scan(
+            body, h, (params["layers"], cache["kv"], jnp.arange(cfg.n_layers)))
+        cache = {"kv": new_kv}
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            layer_p, st = xs
+            x = _norm(cfg, layer_p["ln1"], carry)
+            y, st2 = ssm.mamba1_decode(layer_p["mamba"], x, st,
+                                       n_state=cfg.ssm_state)
+            return carry + y, st2
+
+        h, new_states = jax.lax.scan(body, h, (params["layers"], cache["ssm"]))
+        cache = {"ssm": new_states}
+
+    else:  # hybrid
+        per = cfg.attn_every
+        n_seg = (cfg.n_layers + per - 1) // per
+        sa = params["shared_attn"]
+        new_states = []
+        new_kv = []
+
+        def seg_body(carry, xs):
+            layer_p, st = xs
+            x = _norm(cfg, layer_p["ln1"], carry)
+            y, st2 = ssm.mamba2_decode(layer_p["mamba"], x, st,
+                                       n_state=cfg.ssm_state,
+                                       head_dim=cfg.mamba2_head_dim)
+            return carry + y, st2
+
+        for seg in range(n_seg):
+            kv_seg = jax.tree_util.tree_map(lambda t: t[seg], cache["kv"])
+            x = _norm(cfg, sa["ln"], h)
+            a, kv2 = attention.attention_decode(
+                sa["attn"], x, kv_seg, pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                rope_theta=cfg.rope_theta, cap=cfg.attn_softcap)
+            h = h + a
+            new_kv.append(kv2)
+            lo, hi = seg * per, min((seg + 1) * per, cfg.n_layers)
+            seg_p = jax.tree_util.tree_map(lambda t: t[lo:hi], params["layers"])
+            seg_st = jax.tree_util.tree_map(lambda t: t[lo:hi], cache["ssm"])
+            h, st2 = jax.lax.scan(seg_body, h, (seg_p, seg_st))
+            new_states.append(st2)
+
+        cache = {
+            "ssm": jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *new_states),
+            "kv": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs, axis=0), *new_kv),
+        }
+
+    h = _norm(cfg, params["final_norm"], h)
+    logits = common.dense(params["lm_head"], h)
+    return common.softcap(logits, cfg.logit_softcap), cache
+
+
+def prefill(params, tokens, cfg: ArchConfig, max_len: int,
+            frontend_embeds=None):
+    """Full-sequence forward that also fills the serving cache.
+
+    For attention families this runs the train-style chunked attention and
+    writes K/V into the cache; for SSM families it runs the chunked scan
+    and keeps the final state.  Returns (last_logits, cache).
+    """
+    h = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    b, s = h.shape[0], h.shape[1]
+    cache = init_cache(cfg, b, max_len)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        positions = jnp.arange(s)[None, :]
+
+        def body(carry, xs):
+            layer_p, idx = xs
+            window = _layer_window(cfg, idx)
+            x = _norm(cfg, layer_p["ln1"], carry)
+            q, k, v = attention._project_qkv(
+                layer_p["attn"], x, cfg.n_heads, cfg.n_kv_heads,
+                cfg.resolved_head_dim, positions, cfg.rope_theta)
+            o = attention.flash_attention(
+                q, k, v, q_offset=0, chunk_q=cfg.attn_chunk_q,
+                chunk_k=cfg.attn_chunk_k, window=window, cap=cfg.attn_softcap)
+            a = common.dense(layer_p["attn"]["wo"],
+                             o.reshape(b, s, cfg.n_heads * cfg.resolved_head_dim))
+            h2 = carry + a
+            if cfg.family == "moe":
+                f = moe_lib.moe(layer_p["moe"], _norm(cfg, layer_p["ln2"], h2),
+                                n_experts=cfg.n_experts, top_k=cfg.top_k,
+                                capacity_factor=cfg.moe_capacity_factor,
+                                act_name=cfg.act)
+            else:
+                f = common.mlp(layer_p["mlp"], _norm(cfg, layer_p["ln2"], h2),
+                               cfg.act)
+            return h2 + f, {"k": k.astype(jnp.bfloat16),
+                            "v": v.astype(jnp.bfloat16)}
+
+        h, kvs = jax.lax.scan(_maybe_remat(cfg, body), h,
+                              (params["layers"], jnp.arange(cfg.n_layers)))
+        cache["kv"] = jax.tree_util.tree_map(
+            lambda dst, new: jax.lax.dynamic_update_slice_in_dim(
+                dst, new.astype(dst.dtype), 0, axis=2),
+            cache["kv"], kvs)
+
+    elif cfg.family == "ssm":
+        def body(carry, layer_p):
+            x = _norm(cfg, layer_p["ln1"], carry)
+            y, st = ssm.mamba1(layer_p["mamba"], x, n_state=cfg.ssm_state,
+                               chunk=cfg.ssm_chunk, return_state=True)
+            return carry + y, st
+
+        h, states = jax.lax.scan(_maybe_remat(cfg, body), h, params["layers"])
+        cache["ssm"] = states
+
+    else:  # hybrid
+        per = cfg.attn_every
+        n_seg = (cfg.n_layers + per - 1) // per
+        sa = params["shared_attn"]
+        positions = jnp.arange(s)[None, :]
+        all_states, all_kv = [], []
+
+        def seg_body(carry, layer_p):
+            x = _norm(cfg, layer_p["ln1"], carry)
+            y, st = ssm.mamba2(layer_p["mamba"], x, n_state=cfg.ssm_state,
+                               head_dim=cfg.mamba2_head_dim,
+                               chunk=cfg.ssm_chunk, return_state=True)
+            return carry + y, st
+
+        for seg in range(n_seg):
+            x = _norm(cfg, sa["ln"], h)
+            q, k, v = attention._project_qkv(
+                sa["attn"], x, cfg.n_heads, cfg.n_kv_heads,
+                cfg.resolved_head_dim, positions, cfg.rope_theta)
+            o = attention.flash_attention(
+                q, k, v, q_offset=0, chunk_q=cfg.attn_chunk_q,
+                chunk_k=cfg.attn_chunk_k, cap=cfg.attn_softcap)
+            h = h + common.dense(
+                sa["attn"]["wo"],
+                o.reshape(b, s, cfg.n_heads * cfg.resolved_head_dim))
+            all_kv.append({"k": k.astype(jnp.bfloat16),
+                           "v": v.astype(jnp.bfloat16)})
+            lo, hi = seg * per, min((seg + 1) * per, cfg.n_layers)
+            seg_p = jax.tree_util.tree_map(lambda t: t[lo:hi], params["layers"])
+            h, states = jax.lax.scan(_maybe_remat(cfg, seg_body), h, seg_p)
+            all_states.append(states)
+
+        cache["ssm"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *all_states)
+        kvs = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *all_kv)
+        cache["kv"] = jax.tree_util.tree_map(
+            lambda dst, new: jax.lax.dynamic_update_slice_in_dim(
+                dst, new.astype(dst.dtype), 0, axis=2),
+            cache["kv"], kvs)
+
+    h = _norm(cfg, params["final_norm"], h)
+    logits = common.dense(params["lm_head"], h[:, -1:])
+    return common.softcap(logits, cfg.logit_softcap), cache

@@ -1,0 +1,222 @@
+"""ResNet-18/50 — the paper's own workload (CIFAR-sized stem).
+
+Two evaluation paths over one weight pytree:
+  - `apply`: plaintext JAX forward (training, search simulator).
+  - `mpc_apply`: secret-shared forward on MPCTensors (GMW conv/ReLU), with
+    BatchNorm folded into the preceding conv (inference-time standard) and
+    max-pool removed per the paper's §2.3 setup.
+
+ReLU layers are organised into the paper's five groups (stem + 4 stages);
+each group takes one HummingBird (k, m) assignment.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.resnet import ResNetConfig
+from repro.core import MPCTensor, beaver, comm as comm_lib
+from repro.core.hummingbird import HBConfig, HBLayer
+
+
+def _conv_init(key, cout, cin, k):
+    scale = (2.0 / (cin * k * k)) ** 0.5
+    return jax.random.normal(key, (cout, cin, k, k), jnp.float32) * scale
+
+
+def _bn_init(c):
+    return {"gamma": jnp.ones((c,)), "beta": jnp.zeros((c,)),
+            "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def _block_init(key, cin, cout, cfg, stride):
+    ks = jax.random.split(key, 4)
+    if cfg.block == "basic":
+        p = {
+            "conv1": _conv_init(ks[0], cout, cin, 3), "bn1": _bn_init(cout),
+            "conv2": _conv_init(ks[1], cout, cout, 3), "bn2": _bn_init(cout),
+        }
+    else:  # bottleneck (expansion 4)
+        mid = cout // 4
+        p = {
+            "conv1": _conv_init(ks[0], mid, cin, 1), "bn1": _bn_init(mid),
+            "conv2": _conv_init(ks[1], mid, mid, 3), "bn2": _bn_init(mid),
+            "conv3": _conv_init(ks[2], cout, mid, 1), "bn3": _bn_init(cout),
+        }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(ks[3], cout, cin, 1)
+        p["bn_proj"] = _bn_init(cout)
+    return p
+
+
+def init(key, cfg: ResNetConfig):
+    expansion = 1 if cfg.block == "basic" else 4
+    ks = jax.random.split(key, 3 + len(cfg.stage_blocks))
+    params: Dict = {
+        "stem": _conv_init(ks[0], cfg.widths[0], 3, 3),
+        "bn_stem": _bn_init(cfg.widths[0]),
+        "stages": [],
+    }
+    cin = cfg.widths[0]
+    for si, (n_blocks, width) in enumerate(zip(cfg.stage_blocks, cfg.widths)):
+        cout = width * expansion
+        stage = []
+        bkeys = jax.random.split(ks[1 + si], n_blocks)
+        for bi in range(n_blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            stage.append(_block_init(bkeys[bi], cin, cout, cfg, stride))
+            cin = cout
+        params["stages"].append(stage)
+    params["fc"] = {
+        "w": jax.random.normal(ks[-1], (cin, cfg.n_classes)) * cin ** -0.5,
+        "b": jnp.zeros((cfg.n_classes,)),
+    }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Plaintext path
+# ---------------------------------------------------------------------------
+
+def _conv(x, w, stride=1, padding=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), [(padding, padding)] * 2,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def _bn(x, p, eps=1e-5):
+    inv = p["gamma"] / jnp.sqrt(p["var"] + eps)
+    return x * inv[:, None, None] + (p["beta"] - p["mean"] * inv)[:, None, None]
+
+
+def fold_bn(conv_w, bn, eps=1e-5):
+    """Fold BN into conv: returns (w', b') with conv(x, w') + b' == bn(conv)."""
+    inv = bn["gamma"] / jnp.sqrt(bn["var"] + eps)
+    w = conv_w * inv[:, None, None, None]
+    b = bn["beta"] - bn["mean"] * inv
+    return w, b
+
+
+def apply(params, x, cfg: ResNetConfig, relu_fn=None,
+          collect_acts: bool = False):
+    """x: (B, 3, H, W) -> logits.  `relu_fn(x, group_idx)` lets the search
+    simulator substitute the HummingBird approximate ReLU per group."""
+    relu = relu_fn or (lambda v, g: jax.nn.relu(v))
+    acts: List[jax.Array] = []
+
+    def _relu(v, g):
+        if collect_acts:
+            acts.append(v)
+        return relu(v, g)
+
+    h = _bn(_conv(x, params["stem"]), params["bn_stem"])
+    h = _relu(h, 0)
+    for si, stage in enumerate(params["stages"]):
+        for block in stage:
+            stride = 2 if ("proj" in block and si > 0) else 1
+            if "conv3" in block:  # bottleneck
+                y = _relu(_bn(_conv(h, block["conv1"], 1, 0), block["bn1"]), si + 1)
+                y = _relu(_bn(_conv(y, block["conv2"], stride, 1), block["bn2"]), si + 1)
+                y = _bn(_conv(y, block["conv3"], 1, 0), block["bn3"])
+            else:
+                y = _relu(_bn(_conv(h, block["conv1"], stride, 1), block["bn1"]), si + 1)
+                y = _bn(_conv(y, block["conv2"], 1, 1), block["bn2"])
+            if "proj" in block:
+                h = _bn(_conv(h, block["proj"], stride, 0), block["bn_proj"])
+            h = _relu(h + y, si + 1)
+    h = h.mean(axis=(2, 3))
+    logits = h @ params["fc"]["w"] + params["fc"]["b"]
+    return (logits, acts) if collect_acts else logits
+
+
+def n_relu_groups(cfg: ResNetConfig) -> int:
+    return 1 + len(cfg.stage_blocks)
+
+
+def relu_group_elements(params, cfg: ResNetConfig, in_hw: int = 0) -> List[int]:
+    """Activation counts per ReLU group for one sample (budget weighting)."""
+    hw = in_hw or cfg.in_hw
+    x = jnp.zeros((1, 3, hw, hw))
+    counts = [0] * n_relu_groups(cfg)
+
+    def counting_relu(v, g):
+        counts[g] += int(v.size)
+        return jax.nn.relu(v)
+
+    _ = apply(params, x, cfg, relu_fn=counting_relu)
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# MPC path
+# ---------------------------------------------------------------------------
+
+def relu_plan(params, cfg: ResNetConfig, batch: int, hw: int = 0):
+    """Shape-trace: (n_elements, group) per ReLU call, in call order.
+    Drives offline TTP triple generation for the mesh serving step."""
+    hw = hw or cfg.in_hw
+    plan: List[Tuple[int, int]] = []
+
+    def tracing_relu(v, g):
+        plan.append((int(v.size), g))
+        return jax.nn.relu(v)
+
+    jax.eval_shape(lambda p, x: apply(p, x, cfg, relu_fn=tracing_relu),
+                   params, jax.ShapeDtypeStruct((batch, 3, hw, hw), jnp.float32))
+    return plan
+
+
+def gen_mpc_triples(key, plan, hb: Optional[HBConfig], cfg: ResNetConfig,
+                    cone: bool = False):
+    """Offline TTP phase: one ReluTriples bundle per ReLU call."""
+    hb_layers = (hb.layers if hb is not None
+                 else tuple(HBLayer() for _ in range(n_relu_groups(cfg))))
+    keys = jax.random.split(key, len(plan))
+    return [beaver.gen_relu_triples(k, n, hb_layers[g].width, cone=cone)
+            for k, (n, g) in zip(keys, plan)]
+
+
+def mpc_apply(params, x: MPCTensor, cfg: ResNetConfig, key,
+              hb: Optional[HBConfig] = None, comm=None,
+              triples: Optional[list] = None, cone: bool = False) -> MPCTensor:
+    """Secret-shared inference.  BN folded into convs; ReLU via GMW with
+    the HummingBird (k, m) of each group.  When `triples` is given (mesh
+    serving), they are consumed in call order; otherwise generated inline
+    (sim backend)."""
+    comm = comm or comm_lib.SimComm()
+    hb_layers = (hb.layers if hb is not None
+                 else tuple(HBLayer() for _ in range(n_relu_groups(cfg))))
+    key_iter = iter(jax.random.split(key, 256))
+    triple_iter = iter(triples) if triples is not None else None
+
+    def _relu(t: MPCTensor, g: int) -> MPCTensor:
+        tri = next(triple_iter) if triple_iter is not None else None
+        return t.relu(next(key_iter), comm=comm, hb=hb_layers[g], triples=tri,
+                      cone=cone)
+
+    w, b = fold_bn(params["stem"], params["bn_stem"])
+    h = x.conv2d_public(w, 1, 1).add_public(b[:, None, None], comm)
+    h = _relu(h, 0)
+    for si, stage in enumerate(params["stages"]):
+        for block in stage:
+            stride = 2 if ("proj" in block and si > 0) else 1
+            if "conv3" in block:
+                w1, b1 = fold_bn(block["conv1"], block["bn1"])
+                y = _relu(h.conv2d_public(w1, 1, 0).add_public(b1[:, None, None], comm), si + 1)
+                w2, b2 = fold_bn(block["conv2"], block["bn2"])
+                y = _relu(y.conv2d_public(w2, stride, 1).add_public(b2[:, None, None], comm), si + 1)
+                w3, b3 = fold_bn(block["conv3"], block["bn3"])
+                y = y.conv2d_public(w3, 1, 0).add_public(b3[:, None, None], comm)
+            else:
+                w1, b1 = fold_bn(block["conv1"], block["bn1"])
+                y = _relu(h.conv2d_public(w1, stride, 1).add_public(b1[:, None, None], comm), si + 1)
+                w2, b2 = fold_bn(block["conv2"], block["bn2"])
+                y = y.conv2d_public(w2, 1, 1).add_public(b2[:, None, None], comm)
+            if "proj" in block:
+                wp, bp = fold_bn(block["proj"], block["bn_proj"])
+                h = h.conv2d_public(wp, stride, 0).add_public(bp[:, None, None], comm)
+            h = _relu(h + y, si + 1)
+    h = h.global_avg_pool()
+    return h.matmul_public(params["fc"]["w"]).add_public(params["fc"]["b"], comm)

@@ -1,0 +1,3 @@
+"""Plaintext neural-net substrate: attention, MoE, SSM, common layers."""
+from . import attention, common, moe, ssm
+__all__ = ["attention", "common", "moe", "ssm"]

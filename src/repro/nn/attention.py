@@ -1,0 +1,199 @@
+"""GQA attention with RoPE, sliding windows, logit softcap, KV caches.
+
+Training/prefill use a flash-style chunked attention: an unrolled outer
+loop over query chunks with an inner ``lax.scan`` over key/value chunks and
+an online-softmax accumulator.  Causal block skipping is structural: query
+chunk i only scans kv chunks 0..i, so compiled FLOPs are ~S^2/2 (the HLO
+analyzer sees one while loop per q-chunk with its own trip count).
+
+Decode attends a single new token against the full cache (linear in cache
+length), with optional sliding-window masking; the cache layout
+(B, S, n_kv, head_dim) shards batch on `data` and kv-heads (or head_dim
+when n_kv < mesh model size) on `model`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import constraints
+from . import common
+
+NEG_INF = -2.0e38
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              qkv_bias: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], d_model, n_heads * head_dim, dtype,
+                                with_bias=qkv_bias),
+        "wk": common.dense_init(ks[1], d_model, n_kv * head_dim, dtype,
+                                with_bias=qkv_bias),
+        "wv": common.dense_init(ks[2], d_model, n_kv * head_dim, dtype,
+                                with_bias=qkv_bias),
+        "wo": common.dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    return p
+
+
+def _project_qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta):
+    b, s, _ = x.shape
+    q = common.dense(params["wq"], x).reshape(b, s, n_heads, head_dim)
+    k = common.dense(params["wk"], x).reshape(b, s, n_kv, head_dim)
+    v = common.dense(params["wv"], x).reshape(b, s, n_kv, head_dim)
+    if rope_theta:
+        q = common.rope(q, positions, rope_theta)
+        k = common.rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _chunk_scores(q, k, scale, cap):
+    """q: (B, Cq, K, G, Dh); k: (B, Ck, K, Dh) -> (B, K, G, Cq, Ck)."""
+    s = jnp.einsum("bqkgd,bckd->bkgqc", q, k) * scale
+    return common.softcap(s, cap)
+
+
+def flash_attention(q, k, v, *, q_offset, chunk_q: int, chunk_k: int,
+                    window=None, cap: float = 0.0) -> jax.Array:
+    """Causal chunked attention. q: (B,S,H,Dh); k,v: (B,S,K,Dh).
+
+    Sequences that don't divide the chunk sizes are padded at the end;
+    padded keys sit at positions > every real query so the causal mask
+    removes them, and padded query rows are sliced off the output.
+    """
+    b, s_real, h, dh = q.shape
+    n_kv = k.shape[2]
+    g = h // n_kv
+    scale = dh ** -0.5
+    cq = min(chunk_q, s_real)
+    ck = min(chunk_k, s_real)
+    import math as _math
+    mult = cq * ck // _math.gcd(cq, ck)
+    pad = (-s_real) % mult
+    if pad:
+        widths = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        q = jnp.pad(q, widths)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    s = s_real + pad
+    nq, nk = s // cq, s // ck
+    qc = q.reshape(b, nq, cq, n_kv, g, dh)
+    kc = k.reshape(b, nk, ck, n_kv, dh)
+    vc = v.reshape(b, nk, ck, n_kv, dh)
+    # sequence-parallel attention over `model`: each shard computes all
+    # heads for a slice of the query chunk; k/v chunks are replicated over
+    # model.  Always divisible (cq % 16 == 0), unlike head counts, and the
+    # softmax stays local to the shard.  (See EXPERIMENTS.md §Perf iter 1:
+    # without these constraints XLA replicates attention over `model`.)
+    kc = constraints.shard(kc, "dp", None, None, None, None)
+    vc = constraints.shard(vc, "dp", None, None, None, None)
+    out = []
+    for iq in range(nq):  # unrolled: block-level causal skipping
+        q_i = qc[:, iq].astype(jnp.float32)
+        q_i = constraints.shard(q_i, "dp", "tp", None, None, None)
+        q_pos = q_offset + iq * cq + jnp.arange(cq)
+        n_vis = iq * cq // ck + 1  # kv chunks visible to this q chunk
+
+        def body(carry, inp):
+            m_prev, l_prev, acc = carry
+            k_j, v_j, jk = inp
+            k_pos = jk * ck + jnp.arange(ck)
+            sc = _chunk_scores(q_i, k_j.astype(jnp.float32), scale, cap)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m_prev, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p, v_j.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = constraints.shard(
+            jnp.full((b, n_kv, g, cq), NEG_INF, jnp.float32),
+            "dp", None, None, "tp")
+        l0 = constraints.shard(
+            jnp.zeros((b, n_kv, g, cq), jnp.float32), "dp", None, None, "tp")
+        a0 = constraints.shard(
+            jnp.zeros((b, n_kv, g, cq, dh), jnp.float32),
+            "dp", None, None, "tp", None)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.moveaxis(kc[:, :n_vis], 1, 0), jnp.moveaxis(vc[:, :n_vis], 1, 0),
+             jnp.arange(n_vis)))
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        out.append(jnp.moveaxis(o, 3, 1).reshape(b, cq, h, dh))
+    full = jnp.concatenate(out, axis=1).astype(q.dtype)
+    return full[:, :s_real]
+
+
+def attention(params, x, *, n_heads: int, n_kv: int, head_dim: int,
+              positions=None, rope_theta: float = 10000.0, window=None,
+              cap: float = 0.0, chunk_q: int = 512, chunk_k: int = 1024):
+    """Full-sequence causal attention (training / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions,
+                           rope_theta)
+    o = flash_attention(q, k, v, q_offset=0, chunk_q=chunk_q, chunk_k=chunk_k,
+                        window=window, cap=cap)
+    return common.dense(params["wo"], o.reshape(b, s, n_heads * head_dim))
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+    }
+
+
+def attention_decode(params, x, cache, pos, *, n_heads: int, n_kv: int,
+                     head_dim: int, rope_theta: float = 10000.0,
+                     window=None, cap: float = 0.0):
+    """One-token decode. x: (B, 1, D); pos: scalar current position.
+
+    Returns (y, new_cache).  Attends over cache[: pos+1] via masking.
+    """
+    b = x.shape[0]
+    s_max = cache["k"].shape[1]
+    positions = jnp.full((b, 1), pos)
+    q, k_new, v_new = _project_qkv(params, x, n_heads, n_kv, head_dim,
+                                   positions, rope_theta)
+
+    def _cache_constraint(t):
+        # context-parallel decode: batch over dp, *sequence* over tp — the
+        # per-layer collective becomes a (b, k, g, 1[, dh]) log-sum-exp
+        # combine instead of head_dim-sharded score reductions
+        # (EXPERIMENTS.md §Perf iteration B2).  long_500k (B=1): sequence
+        # over both axes.
+        if constraints.axis_divides("dp", t.shape[0]):
+            return constraints.shard(t, "dp", "tp", None, None)
+        return constraints.shard(t, None, ("dp", "tp"), None, None)
+
+    k_cache = _cache_constraint(jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1))
+    v_cache = _cache_constraint(jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1))
+    g = n_heads // n_kv
+    qh = q.reshape(b, 1, n_kv, g, head_dim).astype(jnp.float32)
+    sc = jnp.einsum("bqkgd,bskd->bkgqs", qh,
+                    k_cache.astype(jnp.float32)) * head_dim ** -0.5
+    sc = common.softcap(sc, cap)
+    kpos = jnp.arange(s_max)
+    mask = kpos <= pos
+    if window is not None:
+        mask &= kpos > pos - window
+    sc = jnp.where(mask, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
+    o = o.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
+    y = common.dense(params["wo"], o)
+    return y, {"k": k_cache, "v": v_cache}

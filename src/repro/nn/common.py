@@ -1,0 +1,123 @@
+"""Shared neural-net primitives for the plaintext model substrate.
+
+Functional style: ``init_*`` builds param pytrees (plain dicts of arrays),
+``apply`` functions are pure.  Sharding is attached later by path-based
+partition rules (runtime/sharding.py), so everything here works both for
+real initialization (smoke tests) and under ``jax.eval_shape`` (dry-run).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import constraints
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               with_bias: bool = False):
+    scale = 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype) * jnp.asarray(scale, dtype)
+    if with_bias:
+        return {"w": w, "b": jnp.zeros((d_out,), dtype)}
+    return {"w": w}
+
+
+def dense(params, x):
+    y = jnp.einsum("...d,df->...f", x, params["w"])
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    # scale may be kept in f32 (master precision); never promote activations
+    return y * params["scale"].astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return y * params["scale"].astype(x.dtype) + params["bias"].astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping."""
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def activation(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+        "tanh": jnp.tanh,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated / plain MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, dtype)["w"],
+         "w_down": dense_init(ks[1], d_ff, d_model, dtype)["w"]}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)["w"]
+    return p
+
+
+def mlp(params, x, act_name: str = "gelu"):
+    act = activation(act_name)
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    if "w_gate" in params:
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        h = act(gate) * up
+    else:
+        h = act(up)
+    # Megatron TP: hidden sharded over model, contraction in w_down emits
+    # the single per-block all-reduce
+    h = constraints.shard(h, "dp", None, "tp")
+    y = jnp.einsum("...f,fd->...d", h, params["w_down"])
+    return constraints.shard(y, "dp", None, None)

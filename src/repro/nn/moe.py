@@ -1,0 +1,108 @@
+"""Top-k mixture-of-experts with capacity-bounded sort-based dispatch.
+
+Dispatch is local to each data shard (experts' FFN weights are TP-sharded
+over `model` on the hidden dim, replicated over `data`), so routing needs
+no all-to-all; an optional EP mode (runtime/sharding.py) shards the expert
+axis instead when E is a multiple of the mesh axis.
+
+FLOPs are honest: tokens are gathered into (E, capacity, D) buffers and
+each expert runs one batched matmul, so compiled compute ~= top_k * tokens
+* FFN (+ router), matching the 6*N_active*D roofline accounting.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, gated: bool = True,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    shape_up = (n_experts, d_model, d_ff)
+    shape_down = (n_experts, d_ff, d_model)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "router": common.dense_init(ks[0], d_model, n_experts, dtype),
+        "w_up": jax.random.normal(ks[1], shape_up, dtype) * scale_in,
+        "w_down": jax.random.normal(ks[2], shape_down, dtype) * scale_out,
+    }
+    if gated:
+        p["w_gate"] = jax.random.normal(ks[3], shape_up, dtype) * scale_in
+    return p
+
+
+def moe(params, x, *, n_experts: int, top_k: int = 2,
+        capacity_factor: float = 1.25, act_name: str = "silu") -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).
+
+    *Local routing*: dispatch is vectorised over the batch dim (which is
+    `data`-sharded), so every shard routes only its own tokens — no
+    all-to-all.  Expert FFN weights are TP-sharded over `model` on the
+    hidden dim.  Capacity-bounded with dropping (Switch-style).
+    """
+    from repro.runtime import constraints
+
+    b, s, d = x.shape
+    logits = common.dense(params["router"], x)               # (B, S, E)
+    weights = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_e = jax.lax.top_k(weights, top_k)             # (B, S, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(max(1, capacity_factor * top_k * s / n_experts))
+    flat_e = top_e.reshape(b, s * top_k)                     # (B, T)
+    flat_w = top_w.reshape(b, s * top_k).astype(x.dtype)
+    flat_tok = jnp.tile(jnp.repeat(jnp.arange(s), top_k)[None], (b, 1))
+
+    order = jnp.argsort(flat_e, axis=-1, stable=True)        # per row
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    # rank of each assignment within its expert group (per row)
+    counts = jnp.sum(jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32),
+                     axis=1)                                 # (B, E)
+    first_idx = jnp.cumsum(counts, axis=-1) - counts         # exclusive cumsum
+    pos = jnp.broadcast_to(jnp.arange(s * top_k), sorted_e.shape)
+    rank = pos - jnp.take_along_axis(first_idx, sorted_e, axis=-1)
+    keep = rank < capacity
+    slot = jnp.where(keep, sorted_e * capacity + rank, n_experts * capacity)
+
+    # gather tokens into per-row (E*cap+1, D) buffers (last row = dropped)
+    src_tok = jnp.take_along_axis(flat_tok, order, axis=-1)  # (B, T)
+    gathered = jnp.take_along_axis(x, src_tok[..., None], axis=1)
+    buf = jnp.zeros((b, n_experts * capacity + 1, d), x.dtype)
+    buf = jax.vmap(lambda bf, sl, g: bf.at[sl].set(g, mode="drop"))(
+        buf, slot, gathered)
+    h = buf[:, :-1].reshape(b, n_experts, capacity, d)
+    h = constraints.shard(h, "dp", None, None, None)
+
+    up = jnp.einsum("becd,edf->becf", h, params["w_up"])
+    if "w_gate" in params:
+        gate = jnp.einsum("becd,edf->becf", h, params["w_gate"])
+        hidden = common.activation(act_name)(gate) * up
+    else:
+        hidden = common.activation(act_name)(up)
+    hidden = constraints.shard(hidden, "dp", None, None, "tp")
+    out_buf = jnp.einsum("becf,efd->becd", hidden, params["w_down"])
+    out_flat = jnp.concatenate(
+        [out_buf.reshape(b, n_experts * capacity, d),
+         jnp.zeros((b, 1, d), x.dtype)], axis=1)
+
+    # scatter back with routing weights
+    contrib = jnp.take_along_axis(out_flat, slot[..., None], axis=1)
+    contrib = contrib * jnp.take_along_axis(flat_w, order, axis=-1)[..., None]
+    y = jnp.zeros((b, s, d), x.dtype)
+    y = jax.vmap(lambda yy, tk, c: yy.at[tk].add(c))(y, src_tok, contrib)
+    return constraints.shard(y, "dp", None, None)
+
+
+def moe_aux_loss(params, x, *, n_experts: int) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style)."""
+    logits = common.dense(params["router"], x.reshape(-1, x.shape[-1]))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, n_experts), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac_tokens * frac_probs)

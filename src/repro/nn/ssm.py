@@ -1,0 +1,248 @@
+"""Selective state-space layers: Mamba1 (falcon-mamba) and Mamba2 (zamba2).
+
+Sequence mixing is a chunked associative scan: the sequence is processed in
+chunks of `chunk` steps with an in-chunk ``lax.associative_scan`` over
+(decay, increment) pairs and a carried inter-chunk state, bounding live
+memory to O(B * chunk * d_inner * N / shards).  Decode is a single-step
+state update (the whole point of SSMs for long_500k: O(1) per token).
+
+State layouts (sharding rules shard d_inner / heads over `model`):
+  mamba1: h (B, d_inner, N),  conv cache (B, k-1, d_inner)
+  mamba2: h (B, H, P, N),     conv cache (B, k-1, d_inner)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import constraints
+from . import common
+
+_CONV_K = 4
+
+
+def _ssm_assoc(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def _pick_chunk(s: int, chunk: int) -> int:
+    """Largest chunk <= `chunk` that divides s (keeps the scan exact for
+    any sequence length, including decode-consistency test lengths)."""
+    for cs in range(min(chunk, s), 0, -1):
+        if s % cs == 0:
+            return cs
+    return 1
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C); b: (C,)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return y + b
+
+
+def _conv_step(cache, x_new, w, b):
+    """cache: (B, K-1, C); x_new: (B, C) -> (y, new_cache)."""
+    full = jnp.concatenate([cache, x_new.astype(cache.dtype)[:, None]],
+                           axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", full, w) + b
+    return y, full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (falcon-mamba-7b): per-channel diagonal A, data-dependent dt/B/C
+# ---------------------------------------------------------------------------
+
+def mamba1_init(key, d_model: int, n_state: int, expand: int = 2,
+                dt_rank: int = 0, dtype=jnp.float32):
+    di = expand * d_model
+    dt_rank = dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": common.dense_init(ks[0], d_model, 2 * di, dtype),
+        "conv_w": jax.random.normal(ks[1], (_CONV_K, di), dtype) * 0.1,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": common.dense_init(ks[2], di, dt_rank + 2 * n_state, dtype),
+        "dt_proj": {"w": jax.random.normal(ks[3], (dt_rank, di), dtype) * 0.1,
+                    "b": jnp.full((di,), -4.6, dtype)},  # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n_state + 1, dtype=jnp.float32),
+                                  (di, 1))).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": common.dense_init(ks[4], di, d_model, dtype),
+    }
+
+
+def _mamba1_core(p, xc, dt_rank: int, n_state: int):
+    """Shared projections: returns (a, inc, c_t, x) given conv'd input xc."""
+    proj = common.dense(p["x_proj"], xc)
+    dt_in, b_t, c_t = jnp.split(proj, [dt_rank, dt_rank + n_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,rd->...d", dt_in, p["dt_proj"]["w"]) + p["dt_proj"]["b"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                   # (Di, N)
+    decay = jnp.exp(dt[..., None] * a)                             # (..., Di, N)
+    inc = (dt * xc)[..., None] * b_t[..., None, :]                 # (..., Di, N)
+    return decay, inc, c_t
+
+
+def mamba1(p, x, *, n_state: int, chunk: int = 128, return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D) [, final decode state]."""
+    b, s, d = x.shape
+    di = p["conv_w"].shape[1]
+    dt_rank = p["x_proj"]["w"].shape[1] - 2 * n_state
+    xz = common.dense(p["in_proj"], x)
+    xz = constraints.shard(xz, "dp", None, "tp")  # d_inner TP over model
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xr, p["conv_w"], p["conv_b"]))
+    cs = _pick_chunk(s, chunk)
+    nc = s // cs
+    xcs = xc.reshape(b, nc, cs, di)
+
+    def chunk_body(h, xck):
+        decay, inc, c_t = _mamba1_core(p, xck.astype(jnp.float32), dt_rank, n_state)
+        inc = constraints.shard(inc, "dp", None, "tp", None)
+        inc = inc.at[:, 0].add(decay[:, 0] * h)
+        _, hs = jax.lax.associative_scan(_ssm_assoc, (decay, inc), axis=1)
+        y = jnp.einsum("bldn,bln->bld", hs, c_t.astype(jnp.float32))
+        return hs[:, -1], y
+
+    h0 = constraints.shard(jnp.zeros((b, di, n_state), jnp.float32),
+                           "dp", "tp", None)
+    h_final, ys = jax.lax.scan(chunk_body, h0, jnp.moveaxis(xcs, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di).astype(x.dtype)
+    y = y + xc * p["d_skip"]
+    y = y * jax.nn.silu(z)
+    out = common.dense(p["out_proj"], y)
+    if return_state:
+        state = {"h": h_final,
+                 "conv": xr[:, -(_CONV_K - 1):].astype(jnp.float32)}
+        return out, state
+    return out
+
+
+def mamba1_init_state(batch: int, d_inner: int, n_state: int):
+    return {"h": jnp.zeros((batch, d_inner, n_state), jnp.float32),
+            "conv": jnp.zeros((batch, _CONV_K - 1, d_inner), jnp.float32)}
+
+
+def mamba1_decode(p, x, state, *, n_state: int):
+    """x: (B, 1, D) -> (y, new_state). O(1) per token."""
+    b = x.shape[0]
+    dt_rank = p["x_proj"]["w"].shape[1] - 2 * n_state
+    xz = common.dense(p["in_proj"], x[:, 0])
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc, conv = _conv_step(state["conv"], xr, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)  # f32 (conv cache dtype); cast back after the skip
+    decay, inc, c_t = _mamba1_core(p, xc.astype(jnp.float32), dt_rank, n_state)
+    h = decay * state["h"] + inc
+    y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+    y = (y + xc * p["d_skip"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return common.dense(p["out_proj"], y)[:, None], {"h": h, "conv": conv}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (zamba2): scalar decay per head, SSD-style heads
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, d_model: int, n_state: int, head_dim: int = 64,
+                expand: int = 2, dtype=jnp.float32):
+    di = expand * d_model
+    n_heads = di // head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": common.dense_init(
+            ks[0], d_model, 2 * di + 2 * n_state + n_heads, dtype),
+        "conv_w": jax.random.normal(ks[1], (_CONV_K, di + 2 * n_state), dtype) * 0.1,
+        "conv_b": jnp.zeros((di + 2 * n_state,), dtype),
+        "a_log": jnp.zeros((n_heads,), dtype),
+        "dt_bias": jnp.full((n_heads,), -4.6, dtype),
+        "d_skip": jnp.ones((n_heads,), dtype),
+        "norm": common.rmsnorm_init(di, dtype),
+        "out_proj": common.dense_init(ks[2], di, d_model, dtype),
+    }
+
+
+def _mamba2_split(p, x, di, n_state, n_heads):
+    zxbcdt = common.dense(p["in_proj"], x)
+    z, xbc, dt_in = jnp.split(zxbcdt, [di, 2 * di + 2 * n_state], axis=-1)
+    return z, xbc, dt_in
+
+
+def mamba2(p, x, *, n_state: int, head_dim: int = 64, chunk: int = 64,
+           return_state: bool = False):
+    b, s, d = x.shape
+    di = p["out_proj"]["w"].shape[0]
+    n_heads = di // head_dim
+    z, xbc, dt_in = _mamba2_split(p, x, di, n_state, n_heads)
+    z = constraints.shard(z, "dp", None, "tp")
+    xbc_raw = xbc
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xr, b_t, c_t = jnp.split(xbc, [di, di + n_state], axis=-1)
+    xr = constraints.shard(xr, "dp", None, "tp")
+    dt = jax.nn.softplus(dt_in + p["dt_bias"]).astype(jnp.float32)   # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                     # (H,)
+    decay = jnp.exp(dt * a)                                          # (B,S,H)
+    xh = xr.reshape(b, s, n_heads, head_dim).astype(jnp.float32)
+    inc = (dt[..., None] * xh)[..., None] * b_t[:, :, None, None, :]  # (B,S,H,P,N)
+    cs = _pick_chunk(s, chunk)
+    nc = s // cs
+
+    def chunk_body(h, inp):
+        dec_k, inc_k, c_k = inp
+        inc_k = constraints.shard(inc_k, "dp", None, "tp", None, None)
+        inc_k = inc_k.at[:, 0].add(dec_k[:, 0, :, None, None] * h)
+        _, hs = jax.lax.associative_scan(
+            _ssm_assoc, (dec_k[..., None, None], inc_k), axis=1)
+        y = jnp.einsum("blhpn,bln->blhp", hs, c_k)
+        return hs[:, -1], y
+
+    split = lambda t: jnp.moveaxis(t.reshape((b, nc, cs) + t.shape[2:]), 1, 0)
+    h0 = constraints.shard(
+        jnp.zeros((b, n_heads, head_dim, n_state), jnp.float32),
+        "dp", "tp", None, None)
+    h_final, ys = jax.lax.scan(
+        chunk_body, h0,
+        (split(decay), split(inc), split(c_t.astype(jnp.float32))))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, n_heads, head_dim)
+    y = y + xh * p["d_skip"][:, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = common.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = common.dense(p["out_proj"], y)
+    if return_state:
+        state = {"h": h_final,
+                 "conv": xbc_raw[:, -(_CONV_K - 1):].astype(jnp.float32)}
+        return out, state
+    return out
+
+
+def mamba2_init_state(batch: int, d_inner: int, n_state: int, head_dim: int = 64):
+    n_heads = d_inner // head_dim
+    return {"h": jnp.zeros((batch, n_heads, head_dim, n_state), jnp.float32),
+            "conv": jnp.zeros((batch, _CONV_K - 1, d_inner + 2 * n_state),
+                              jnp.float32)}
+
+
+def mamba2_decode(p, x, state, *, n_state: int, head_dim: int = 64):
+    b = x.shape[0]
+    di = p["out_proj"]["w"].shape[0]
+    n_heads = di // head_dim
+    z, xbc, dt_in = _mamba2_split(p, x[:, 0], di, n_state, n_heads)
+    xbc, conv = _conv_step(state["conv"], xbc, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xr, b_t, c_t = jnp.split(xbc, [di, di + n_state], axis=-1)
+    dt = jax.nn.softplus(dt_in + p["dt_bias"]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                          # (B,H)
+    xh = xr.reshape(b, n_heads, head_dim).astype(jnp.float32)
+    inc = (dt[..., None] * xh)[..., None] * b_t[:, None, None, :]
+    h = decay[..., None, None] * state["h"] + inc
+    y = jnp.einsum("bhpn,bn->bhp", h, c_t.astype(jnp.float32))
+    y = y + xh * p["d_skip"][:, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = common.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return common.dense(p["out_proj"], y)[:, None], {"h": h, "conv": conv}

@@ -1,0 +1,3 @@
+"""Distributed runtime: partition rules, HLO analysis, roofline."""
+from . import hlo_analyzer, roofline, sharding
+__all__ = ["hlo_analyzer", "roofline", "sharding"]

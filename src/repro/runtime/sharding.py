@@ -1,0 +1,186 @@
+"""Path-based partition rules: DP / FSDP / TP / SP / EP.
+
+Every parameter leaf is matched by the trailing components of its pytree
+path; rules produce a PartitionSpec whose axes reference the production
+mesh ("pod", "data", "model").  Modes:
+
+  train  - FSDP (params + optimizer states sharded over the data axes,
+           ZeRO-3 style) x TP over `model`; activations batch-sharded.
+  serve  - TP over `model`; params replicated over `data` unless the arch
+           is flagged huge (grok/mixtral/internvl) in which case they stay
+           FSDP-sharded ("weight-gathered serving").
+
+KV caches: batch over data when divisible, else sequence (context
+parallelism for long_500k B=1); kv-heads over model when divisible, else
+head_dim.  All rules are pure functions of (shape, path, mesh, mode) so
+the same code drives the 1-device smoke mesh and the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# archs whose params don't fit TP-16 replicated-over-data at bf16.
+# internvl2-76b (152 GB bf16 / 16 = 9.5 GB/dev) fits TP-16 and serves
+# without per-step weight gathers — EXPERIMENTS.md §Perf iteration B
+# measured 2.19 s -> ~0 collective per decode step by removing it here.
+FSDP_SERVE_ARCHS = ("grok-1-314b", "mixtral-8x22b")
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+
+
+def model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return "/".join(out)
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def _maybe(axis, dim: int, mesh: Mesh) -> Optional[Any]:
+    """Use `axis` for this dim only if the dim divides the axis size."""
+    if axis is None:
+        return None
+    size = (int(np.prod([mesh.shape[a] for a in axis]))
+            if isinstance(axis, tuple) else mesh.shape.get(axis, 1))
+    return axis if _div(dim, size) else None
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+_RULES = [
+    # (path regex, (dim -> role)) roles: F=fsdp axes, M=model, N=replicated
+    (r"embed/table$",             ("M", "F")),
+    (r"lm_head/w$",               ("F", "M")),
+    (r"(attn|xattn)/w[qkv]/w$",   ("F", "M")),
+    (r"(attn|xattn)/w[qkv]/b$",   ("M",)),
+    (r"(attn|xattn)/wo/w$",       ("M", "F")),
+    (r"mlp/w_(up|gate)$",         ("F", "M")),
+    (r"mlp/w_down$",              ("M", "F")),
+    (r"moe/router/w$",            ("F", "N")),
+    (r"moe/w_(up|gate)$",         ("E", "F", "M")),
+    (r"moe/w_down$",              ("E", "M", "F")),
+    (r"mamba/in_proj/w$",         ("F", "M")),
+    (r"mamba/conv_w$",            ("N", "M")),
+    (r"mamba/conv_b$",            ("M",)),
+    (r"mamba/x_proj/w$",          ("M", "N")),
+    (r"mamba/dt_proj/w$",         ("N", "M")),
+    (r"mamba/dt_proj/b$",         ("M",)),
+    (r"mamba/a_log$",             ("M", "N")),
+    (r"mamba/d_skip$",            ("M",)),
+    (r"mamba/dt_bias$",           ("M",)),
+    (r"mamba/norm/scale$",        ("M",)),
+    (r"mamba/out_proj/w$",        ("M", "F")),
+]
+
+
+def param_spec(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
+               mode: str, cfg: Optional[ArchConfig] = None,
+               ep: bool = False) -> P:
+    fsdp: Any = data_axes(mesh)
+    if mode == "serve" and cfg is not None and cfg.name not in FSDP_SERVE_ARCHS:
+        fsdp = None  # replicate over data; TP only
+    stacked = bool(re.search(r"(^|/)((enc_|dec_)?layers)/", path_str))
+    n_lead = 1 if stacked else 0
+
+    for pat, roles in _RULES:
+        if re.search(pat, path_str):
+            dims = shape[n_lead:]
+            spec: list = [None] * n_lead
+            # special-case mamba a_log (stacked 1D for mamba2)
+            roles_eff = roles[: len(dims)]
+            for dim, role in zip(dims, roles_eff):
+                if role == "M":
+                    spec.append(_maybe("model", dim, mesh))
+                elif role == "F":
+                    spec.append(_maybe(fsdp, dim, mesh) if fsdp else None)
+                elif role == "E":
+                    spec.append(_maybe("model", dim, mesh) if ep else None)
+                else:
+                    spec.append(None)
+            spec += [None] * (len(shape) - len(spec))
+            return P(*spec)
+    # norms, scalars, biases: replicated (tiny)
+    return P(*([None] * len(shape)))
+
+
+def param_shardings(params, mesh: Mesh, mode: str,
+                    cfg: Optional[ArchConfig] = None, ep: bool = False):
+    def one(path, leaf):
+        spec = param_spec(_path_str(path), leaf.shape, mesh, mode, cfg, ep)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_spec(batch: int, mesh: Mesh, extra_dims: int = 1) -> P:
+    dp = data_axes(mesh)
+    axis = _maybe(dp, batch, mesh)
+    return P(axis, *([None] * extra_dims))
+
+
+def cache_spec(path_str: str, shape: Tuple[int, ...], cfg: ArchConfig,
+               mesh: Mesh) -> P:
+    """KV/SSM cache sharding. Leading dim is the stacked layer axis."""
+    dp = data_axes(mesh)
+    if re.search(r"(kv|self_kv)/[kv]$|mem_[kv]$", path_str):
+        # (L, B, S, K, Dh): context-parallel — batch over dp, sequence over
+        # model (long_500k B=1: sequence over both axes); matches the
+        # in-model constraint in nn/attention.attention_decode.
+        _, b, s, kheads, dh = shape
+        batch_axis = _maybe(dp, b, mesh)
+        if batch_axis:
+            return P(None, batch_axis, _maybe("model", s, mesh), None, None)
+        both = dp + (("model",) if "model" in mesh.axis_names else ())
+        return P(None, None, _maybe(both, s, mesh), None, None)
+    if re.search(r"ssm/h$", path_str):
+        # mamba1: (L, B, Di, N); mamba2: (L, B, H, P, N)
+        b = shape[1]
+        batch_axis = _maybe(dp, b, mesh)
+        inner = _maybe("model", shape[2], mesh)
+        return P(None, batch_axis, inner, *([None] * (len(shape) - 3)))
+    if re.search(r"ssm/conv$", path_str):
+        b = shape[1]
+        return P(None, _maybe(dp, b, mesh), None,
+                 _maybe("model", shape[3], mesh))
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(cache, cfg: ArchConfig, mesh: Mesh):
+    def one(path, leaf):
+        return NamedSharding(mesh, cache_spec(_path_str(path), leaf.shape,
+                                              cfg, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,5 @@
+"""HummingBird offline phase: MPC simulator, search engine, finetuning."""
+from . import engine, finetune, simulator
+from .engine import SearchResult, search_budget, search_eco
+__all__ = ["engine", "finetune", "simulator", "SearchResult",
+           "search_budget", "search_eco"]

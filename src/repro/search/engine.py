@@ -1,0 +1,146 @@
+"""§4.1.2 search engine: HummingBird-eco and HummingBird-b.
+
+HummingBird-eco: keep m = 0 and pick, per ReLU group, the smallest k with
+zero sign-estimation error on the validation set (Theorem 1: k such that
+-2^(k-1) <= x_int < 2^(k-1); searched in O(N) per group by validating
+decreasing k until the outputs change).
+
+HummingBird-b: DFS over per-group bit assignments with
+  - locally-optimal (k, m): previous groups fixed to their found values,
+    later groups optimistic (no bits dropped), enumerate the (k, m) pairs
+    with k - m = assigned bits and keep the best validation accuracy;
+  - Early stop 1: optimistic accuracy below the absolute threshold;
+  - Early stop 2: optimistic accuracy below the best complete config;
+  - Early stop 3: budget exceeded (bits weighted by group element counts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hummingbird import HBConfig, HBLayer, RING_BITS, safe_k
+from . import simulator
+
+
+@dataclasses.dataclass
+class SearchResult:
+    config: HBConfig
+    accuracy: float
+    baseline_accuracy: float
+    budget_fraction: float
+    search_time_s: float
+    nodes_visited: int
+    nodes_pruned: int
+
+
+def _eval(apply_fn, params, xs, ys, cfg, key):
+    return simulator.evaluate_accuracy(apply_fn, params, xs, ys, cfg, key)
+
+
+def search_eco(apply_fn, params, xs, ys, group_elements: Sequence[int],
+               key, margin_bits: int = 1) -> SearchResult:
+    """Zero-error config: per-group smallest k whose validation *outputs*
+    are bit-identical to the exact model (the paper's eco criterion), m=0."""
+    t0 = time.time()
+    n_groups = len(group_elements)
+    base_cfg = HBConfig.exact(group_elements)
+    base_acc = _eval(apply_fn, params, xs, ys, base_cfg, key)
+    ref_logits = apply_fn(params, xs, relu_fn=None)
+    max_ints = simulator.max_activation_ints(apply_fn, params, xs, n_groups)
+
+    def outputs_intact(cfg: HBConfig) -> bool:
+        relu_fn = simulator.make_group_relu(cfg, key)
+        logits = apply_fn(params, xs, relu_fn=relu_fn)
+        return bool(jnp.array_equal(logits, ref_logits))
+
+    layers = []
+    nodes = 0
+    for g in range(n_groups):
+        k = safe_k(max_ints[g], m=0, margin_bits=margin_bits)
+        # validate downward: shrink while the validation outputs are intact
+        while k > 2:
+            cand = list(layers) + [HBLayer(k=k - 1, m=0)] + \
+                [HBLayer() for _ in range(n_groups - g - 1)]
+            cfg = HBConfig(tuple(cand), tuple(group_elements))
+            nodes += 1
+            if not outputs_intact(cfg):
+                break
+            k -= 1
+        layers.append(HBLayer(k=k, m=0))
+    cfg = HBConfig(tuple(layers), tuple(group_elements))
+    acc = _eval(apply_fn, params, xs, ys, cfg, key)
+    return SearchResult(cfg, acc, base_acc, cfg.budget_fraction(),
+                        time.time() - t0, nodes, 0)
+
+
+def search_budget(apply_fn, params, xs, ys, group_elements: Sequence[int],
+                  key, budget: float, *, acc_threshold_drop: float = 0.10,
+                  bit_choices: Optional[Sequence[int]] = None,
+                  max_k: int = 28) -> SearchResult:
+    """HummingBird-b: budgeted DFS with locally-optimal (k, m)."""
+    t0 = time.time()
+    n_groups = len(group_elements)
+    elements = np.asarray(group_elements, np.float64)
+    total_bits = RING_BITS * elements.sum()
+    base_cfg = HBConfig.exact(group_elements)
+    base_acc = _eval(apply_fn, params, xs, ys, base_cfg, key)
+    threshold = base_acc - acc_threshold_drop
+    bit_choices = sorted(bit_choices or (4, 5, 6, 8, 10), reverse=True)
+
+    best: dict = {"acc": -1.0, "layers": None}
+    stats = {"visited": 0, "pruned": 0}
+
+    def local_best(prefix: List[HBLayer], g: int, width: int):
+        """Locally-optimal (k, m) with k - m = width for group g."""
+        best_local = (None, -1.0)
+        for k in range(width, max_k + 1):
+            m = k - width
+            cand = prefix + [HBLayer(k=k, m=m)] + \
+                [HBLayer() for _ in range(n_groups - g - 1)]
+            cfg = HBConfig(tuple(cand), tuple(group_elements))
+            stats["visited"] += 1
+            acc = _eval(apply_fn, params, xs, ys, cfg, key)
+            if acc > best_local[1]:
+                best_local = (HBLayer(k=k, m=m), acc)
+        return best_local
+
+    def dfs(prefix: List[HBLayer], g: int, bits_used: float):
+        if g == n_groups:
+            cfg = HBConfig(tuple(prefix), tuple(group_elements))
+            acc = _eval(apply_fn, params, xs, ys, cfg, key)
+            if acc > best["acc"]:
+                best["acc"] = acc
+                best["layers"] = tuple(prefix)
+            return
+        for width in bit_choices:
+            new_bits = bits_used + width * elements[g]
+            # Early stop 3: even zero bits for the rest exceeds the budget
+            if new_bits > budget * total_bits:
+                stats["pruned"] += 1
+                continue
+            layer, opt_acc = local_best(prefix, g, width)
+            if opt_acc < threshold:            # Early stop 1
+                stats["pruned"] += 1
+                continue
+            if opt_acc <= best["acc"]:         # Early stop 2
+                stats["pruned"] += 1
+                continue
+            dfs(prefix + [layer], g + 1, new_bits)
+
+    dfs([], 0, 0.0)
+    if best["layers"] is None:
+        # nothing met the budget+threshold; fall back to uniform smallest
+        width = bit_choices[-1]
+        best["layers"] = tuple(HBLayer(k=width + 13, m=13)
+                               for _ in range(n_groups))
+        best["acc"] = _eval(apply_fn, params, xs, ys,
+                            HBConfig(best["layers"], tuple(group_elements)),
+                            key)
+    cfg = HBConfig(best["layers"], tuple(group_elements))
+    return SearchResult(cfg, best["acc"], base_acc, cfg.budget_fraction(),
+                        time.time() - t0, stats["visited"], stats["pruned"])

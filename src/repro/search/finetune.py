@@ -1,0 +1,72 @@
+"""§4.1.3 finetuning: retrain briefly with approximate ReLU in the loop.
+
+The reduced-ring sign estimate is piecewise-constant in x, so we use a
+straight-through estimator: forward uses the simulated HummingBird ReLU,
+backward uses the exact ReLU gradient.  The paper reports this recovers
+0.95-7.05% accuracy at aggressive budgets (Table 3); our synthetic-data
+benchmark reproduces the recovery mechanism.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hummingbird import HBConfig
+from repro.train import optimizer as opt_lib
+from . import simulator
+
+
+def ste_hb_relu(x, k: int, m: int, key):
+    """Forward: approximate ReLU; backward: exact ReLU gradient."""
+    approx = simulator.simulated_hb_relu(x, k, m, key)
+    exact = jax.nn.relu(x)
+    return exact + jax.lax.stop_gradient(approx - exact)
+
+
+def make_ste_relu(cfg: HBConfig, key) -> Callable:
+    keys = jax.random.split(key, max(cfg.n_groups, 1))
+
+    def relu_fn(x, g):
+        layer = cfg.layers[g]
+        if layer.k >= 64 and layer.m == 0:
+            return jax.nn.relu(x)
+        return ste_hb_relu(x, layer.k, layer.m, keys[g])
+
+    return relu_fn
+
+
+def finetune(apply_fn, params, xs, ys, hb_cfg: HBConfig, key, *,
+             epochs: int = 2, batch: int = 64, lr: float = 1e-3):
+    """A few epochs of cross-entropy finetuning with the approximate ReLU."""
+    opt = opt_lib.SGD(schedule=opt_lib.Schedule(peak_lr=lr, warmup_steps=0,
+                                                decay_steps=0), momentum=0.9)
+    opt_state = opt.init(params)
+    step = jnp.zeros((), jnp.int32)
+    relu_key, key = jax.random.split(key)
+
+    def loss_fn(p, xb, yb, rkey):
+        relu_fn = make_ste_relu(hb_cfg, rkey)
+        logits = apply_fn(p, xb, relu_fn=relu_fn)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        return -jnp.take_along_axis(logp, yb[:, None], axis=-1).mean()
+
+    @jax.jit
+    def train_step(p, opt_state, step, xb, yb, rkey):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, yb, rkey)
+        p2, opt2, _ = opt.update(grads, opt_state, p, step)
+        return p2, opt2, step + 1, loss
+
+    n = xs.shape[0]
+    losses = []
+    for epoch in range(epochs):
+        perm_key, relu_key, key = jax.random.split(key, 3)
+        order = jax.random.permutation(perm_key, n)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            params, opt_state, step, loss = train_step(
+                params, opt_state, step, xs[idx], ys[idx], relu_key)
+            losses.append(float(loss))
+    return params, losses

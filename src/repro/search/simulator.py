@@ -1,0 +1,80 @@
+"""§4.1.1 MPC simulator: plaintext inference with share-domain ReLU.
+
+All layers except ReLU run a vanilla single-node forward; ReLU encodes to
+the 2^64 ring, draws a random share split, drops bits per (k, m) and
+evaluates the sign on the reduced ring — mathematically identical to the
+full GMW outcome (including the floor(x/2^m)-1 off-by-one and underflow
+cases) but with zero protocol/communication cost, so the search engine can
+score thousands of configurations quickly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed, ring
+from repro.core.hummingbird import HBConfig, HBLayer
+
+
+def simulated_hb_relu(x: jax.Array, k: int, m: int, key) -> jax.Array:
+    """ReLU(x) with the sign estimated on the reduced ring <x>[k:m]."""
+    if k >= 64 and m == 0:
+        return jax.nn.relu(x)
+    enc = fixed.encode(x)
+    s0 = ring.uniform(key, x.shape)
+    s1 = ring.sub(enc, s0)
+    w = k - m
+    if w <= 32:
+        v0 = ring.extract_bits(s0, k, m)
+        v1 = ring.extract_bits(s1, k, m)
+        total = v0 + v1  # uint32 wraps; reduce mod 2^w
+        mask = jnp.uint32(0xFFFFFFFF) if w == 32 else jnp.uint32((1 << w) - 1)
+        total = total & mask
+        sign = (total >> (w - 1)) & jnp.uint32(1)
+    else:
+        r0 = ring.rshift_logical(s0, m)
+        r1 = ring.rshift_logical(s1, m)
+        total = ring.add(r0, r1)
+        sign = ring.bit(total, w - 1)
+    drelu = (1 - sign).astype(x.dtype)
+    return x * drelu
+
+
+def make_group_relu(cfg: HBConfig, key) -> Callable:
+    """relu_fn(x, group) for models whose apply() takes a pluggable ReLU."""
+    keys = jax.random.split(key, max(cfg.n_groups, 1))
+
+    def relu_fn(x, group):
+        layer = cfg.layers[group]
+        return simulated_hb_relu(x, layer.k, layer.m, keys[group])
+
+    return relu_fn
+
+
+def evaluate_accuracy(apply_fn, params, xs, ys, cfg: HBConfig, key,
+                      batch: int = 256) -> float:
+    """Top-1 accuracy of the simulated approximate model."""
+    relu_fn = make_group_relu(cfg, key)
+    n = xs.shape[0]
+    correct = 0
+    for i in range(0, n, batch):
+        logits = apply_fn(params, xs[i:i + batch], relu_fn=relu_fn)
+        correct += int((jnp.argmax(logits, -1) == ys[i:i + batch]).sum())
+    return correct / n
+
+
+def max_activation_ints(apply_fn, params, xs, n_groups: int,
+                        frac_bits: int = 16) -> List[int]:
+    """Per-group max |round(x * 2^frac)| over the validation set — drives
+    HummingBird-eco's zero-error k selection (Theorem 1)."""
+    maxes = [0.0] * n_groups
+
+    def relu_fn(x, g):
+        maxes[g] = max(maxes[g], float(jnp.max(jnp.abs(x))))
+        return jax.nn.relu(x)
+
+    _ = apply_fn(params, xs, relu_fn=relu_fn)
+    return [int(round(m * 2 ** frac_bits)) for m in maxes]

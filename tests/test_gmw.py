@@ -1,0 +1,127 @@
+"""GMW protocol unit tests: shares, Beaver, A2B adder, B2A, DReLU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import beaver, comm as comm_lib, fixed, gmw, ring, shares
+
+CM = comm_lib.SimComm()
+
+
+def test_share_reconstruct_roundtrip(rng):
+    vals = rng.integers(0, 2**64, 128, dtype=np.uint64)
+    xs = shares.share(jax.random.PRNGKey(0), ring.from_uint64_np(vals))
+    np.testing.assert_array_equal(ring.to_uint64_np(shares.reconstruct(xs)), vals)
+    # shares are not the plaintext
+    assert not np.array_equal(ring.to_uint64_np(xs[0]), vals)
+
+
+def test_three_party_shares(rng):
+    vals = rng.integers(0, 2**64, 32, dtype=np.uint64)
+    xs = shares.share(jax.random.PRNGKey(1), ring.from_uint64_np(vals),
+                      n_parties=3)
+    assert xs.shape[0] == 3
+    np.testing.assert_array_equal(ring.to_uint64_np(shares.reconstruct(xs)), vals)
+
+
+def test_pack_unpack_roundtrip(rng):
+    bits = rng.integers(0, 2, (5, 100), dtype=np.uint32)
+    packed = shares.pack_bits(jnp.asarray(bits))
+    assert packed.shape == (5, 4)
+    back = shares.unpack_bits(packed, 100)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+
+
+def test_beaver_arith_triple(rng):
+    tri = beaver.gen_arith(jax.random.PRNGKey(2), (64,))
+    a = shares.reconstruct(tri.a)
+    b = shares.reconstruct(tri.b)
+    c = shares.reconstruct(tri.c)
+    np.testing.assert_array_equal(
+        ring.to_uint64_np(c),
+        ring.to_uint64_np(a) * ring.to_uint64_np(b))
+
+
+def test_beaver_bin_triple():
+    tri = beaver.gen_bin(jax.random.PRNGKey(3), (8, 16))
+    a = shares.xor_reconstruct(tri.a)
+    b = shares.xor_reconstruct(tri.b)
+    c = shares.xor_reconstruct(tri.c)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(a & b))
+
+
+def test_and_open(rng):
+    x = rng.integers(0, 2**32, (4, 8), dtype=np.uint64).astype(np.uint32)
+    y = rng.integers(0, 2**32, (4, 8), dtype=np.uint64).astype(np.uint32)
+    xs = shares.xor_share_packed(jax.random.PRNGKey(4), jnp.asarray(x))
+    ys = shares.xor_share_packed(jax.random.PRNGKey(5), jnp.asarray(y))
+    tri = beaver.gen_bin(jax.random.PRNGKey(6), (4, 8))
+    zs = gmw.and_open(xs, ys, tri, CM)
+    np.testing.assert_array_equal(np.asarray(shares.xor_reconstruct(zs)), x & y)
+
+
+@pytest.mark.parametrize("w", [1, 2, 4, 6, 8, 16, 32, 64])
+def test_drelu_all_widths(w, rng):
+    """DReLU on every ring width: sign of values within the safe range."""
+    E = 64
+    lim = min(2 ** (w - 1) - 1, 2 ** 20) if w > 1 else 0
+    ints = rng.integers(-lim, lim + 1, E).astype(np.int64)
+    X = shares.share(jax.random.PRNGKey(7), ring.from_uint64_np(ints.view(np.uint64)))
+    tr = beaver.gen_relu_triples(jax.random.PRNGKey(8), E, w)
+    D = gmw.drelu(jax.random.PRNGKey(9), X, tr, CM, k=w, m=0)
+    d = fixed.decode_np(shares.reconstruct(D), frac_bits=0)
+    np.testing.assert_array_equal(d, (ints >= 0).astype(np.float64))
+
+
+def test_relu_mult_uses_full_ring_value(rng):
+    """Eq. 3: the final multiply uses the untruncated share of x."""
+    x = rng.uniform(0.5, 4.0, 32).astype(np.float32)  # all positive
+    X = shares.share(jax.random.PRNGKey(10), fixed.encode_np(x))
+    tr = beaver.gen_relu_triples(jax.random.PRNGKey(11), 32, 6)
+    R = gmw.relu(jax.random.PRNGKey(12), X, tr, CM, k=20, m=14)
+    got = fixed.decode_np(shares.reconstruct(R))
+    # values >= 0.5 are far above the 2^-2 pruning threshold: exact output
+    np.testing.assert_allclose(got, x, atol=1e-4)
+
+
+def test_b2a_bit():
+    bits = np.array([0, 1, 1, 0, 1], np.uint32)
+    # single-bit XOR shares (b2a_bit expects per-party values in {0,1})
+    b0 = np.array([1, 0, 1, 1, 0], np.uint32)
+    bs = jnp.asarray(np.stack([b0, bits ^ b0]))
+    tri = beaver.gen_arith(jax.random.PRNGKey(14), (5,))
+    arith = gmw.b2a_bit(bs, tri, CM)
+    got = fixed.decode_np(shares.reconstruct(arith), frac_bits=0)
+    np.testing.assert_array_equal(got, np.asarray(bits, np.float64))
+
+
+@pytest.mark.parametrize("w,k,m", [(5, 19, 14), (8, 21, 13), (64, 64, 0)])
+def test_cone_pruned_adder_bit_identical(w, k, m, rng):
+    """Beyond-paper MSB-cone pruning: same outputs, fewer AND gates."""
+    from repro.core import costmodel
+    E = 128
+    x = rng.uniform(-3.9, 3.9, E).astype(np.float32)
+    X = shares.share(jax.random.PRNGKey(20), fixed.encode_np(x))
+    tr_full = beaver.gen_relu_triples(jax.random.PRNGKey(21), E, w)
+    tr_cone = beaver.gen_relu_triples(jax.random.PRNGKey(21), E, w, cone=True)
+    r_full = gmw.relu(jax.random.PRNGKey(22), X, tr_full, CM, k=k, m=m)
+    r_cone = gmw.relu(jax.random.PRNGKey(22), X, tr_cone, CM, k=k, m=m,
+                      cone=True)
+    np.testing.assert_array_equal(
+        fixed.decode_np(shares.reconstruct(r_full)),
+        fixed.decode_np(shares.reconstruct(r_cone)))
+    full_c = costmodel.relu_cost(E, w).breakdown["circuit"]
+    cone_c = costmodel.relu_cost(E, w, cone=True).breakdown["circuit"]
+    assert cone_c < full_c / 2  # at least 2x fewer circuit bytes
+    # same round count: cone prunes gates, not levels
+    assert costmodel.relu_cost(E, w, cone=True).rounds == \
+        costmodel.relu_cost(E, w).rounds
+
+
+def test_cone_sets_structure():
+    init_pos, level_sets = gmw.cone_sets(8)
+    # total AND positions ~ 2(w-1) not w*log(w)
+    total = len(init_pos) + sum(len(s) for s in level_sets)
+    assert total <= 2 * 8
+    assert level_sets[-1] == [6]  # final level: only G[w-2]

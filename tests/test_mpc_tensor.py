@@ -1,0 +1,83 @@
+"""MPCTensor linear ops + ReLU vs plaintext, and the MPC ResNet e2e."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RESNET_SMOKE
+from repro.core import MPCTensor, HBLayer
+from repro.models import resnet
+
+
+def test_matmul_conv_pool(rng):
+    x_f = rng.uniform(-4, 4, (6, 32)).astype(np.float32)
+    w_f = rng.uniform(-1, 1, (32, 8)).astype(np.float32)
+    X = MPCTensor.from_plain(jax.random.PRNGKey(0), jnp.asarray(x_f))
+    np.testing.assert_allclose(X.matmul_public(jnp.asarray(w_f)).reveal_np(),
+                               x_f @ w_f, atol=2e-3)
+    xc = rng.uniform(-2, 2, (2, 3, 8, 8)).astype(np.float32)
+    wc = rng.uniform(-1, 1, (4, 3, 3, 3)).astype(np.float32)
+    Xc = MPCTensor.from_plain(jax.random.PRNGKey(1), jnp.asarray(xc))
+    got = Xc.conv2d_public(jnp.asarray(wc), 1, 1).reveal_np()
+    ref = jax.lax.conv_general_dilated(
+        jnp.asarray(xc), jnp.asarray(wc), (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    np.testing.assert_allclose(got, np.asarray(ref), atol=5e-3)
+    P = Xc.avg_pool(2)
+    np.testing.assert_allclose(
+        P.reveal_np(), xc.reshape(2, 3, 4, 2, 4, 2).mean(axis=(3, 5)), atol=2e-3)
+
+
+def test_add_public_and_arith(rng):
+    x = rng.uniform(-2, 2, (16,)).astype(np.float32)
+    y = rng.uniform(-2, 2, (16,)).astype(np.float32)
+    X = MPCTensor.from_plain(jax.random.PRNGKey(2), jnp.asarray(x))
+    Y = MPCTensor.from_plain(jax.random.PRNGKey(3), jnp.asarray(y))
+    np.testing.assert_allclose((X + Y).reveal_np(), x + y, atol=1e-4)
+    np.testing.assert_allclose((X - Y).reveal_np(), x - y, atol=1e-4)
+    np.testing.assert_allclose(X.add_public(1.5).reveal_np(), x + 1.5, atol=1e-4)
+    np.testing.assert_allclose(X.mul_public(-2.25).reveal_np(), x * -2.25,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("k,m", [(64, 0), (21, 0), (21, 10)])
+def test_mpc_relu_configs(k, m, rng):
+    x = rng.uniform(-4, 4, (96,)).astype(np.float32)
+    X = MPCTensor.from_plain(jax.random.PRNGKey(4), jnp.asarray(x))
+    R = X.relu(jax.random.PRNGKey(5), hb=HBLayer(k=k, m=m))
+    got = R.reveal_np()
+    xr = X.reveal_np()  # fixed-point-rounded input
+    exact = np.maximum(xr, 0)
+    if m == 0:
+        np.testing.assert_allclose(got, exact, atol=1e-4)
+    else:
+        thresh = 2.0 ** (m - 16)
+        pruned = np.where((xr > 0) & (xr < thresh), 0.0, exact)
+        ok = (np.abs(got - exact) < 1e-3) | (np.abs(got - pruned) < 1e-3)
+        assert ok.all()
+
+
+def test_mpc_resnet_matches_plaintext(rng):
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 16, 16)) * 0.5
+    ref_logits = resnet.apply(params, x, RESNET_SMOKE)
+    X = MPCTensor.from_plain(jax.random.PRNGKey(2), x)
+    out = resnet.mpc_apply(params, X, RESNET_SMOKE, jax.random.PRNGKey(3))
+    np.testing.assert_allclose(out.reveal_np(), np.asarray(ref_logits),
+                               atol=2e-2)
+
+
+def test_mpc_resnet_with_pregenerated_triples(rng):
+    """Mesh-serving path: triples planned + generated offline."""
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 16, 16)) * 0.5
+    plan = resnet.relu_plan(params, RESNET_SMOKE, batch=2)
+    assert len(plan) > 0
+    triples = resnet.gen_mpc_triples(jax.random.PRNGKey(4), plan, None,
+                                     RESNET_SMOKE)
+    X = MPCTensor.from_plain(jax.random.PRNGKey(2), x)
+    out = resnet.mpc_apply(params, X, RESNET_SMOKE, jax.random.PRNGKey(3),
+                           triples=triples)
+    ref_logits = resnet.apply(params, x, RESNET_SMOKE)
+    np.testing.assert_allclose(out.reveal_np(), np.asarray(ref_logits),
+                               atol=2e-2)

@@ -1,0 +1,94 @@
+"""Ring64 limb arithmetic vs numpy uint64 oracle + hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fixed, ring
+
+U64 = st.integers(min_value=0, max_value=2**64 - 1)
+
+
+def _np(xs):
+    return np.asarray(xs, np.uint64)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(U64, min_size=1, max_size=8), st.lists(U64, min_size=1, max_size=8))
+def test_add_sub_mul_match_uint64(a_list, b_list):
+    n = min(len(a_list), len(b_list))
+    a_np, b_np = _np(a_list[:n]), _np(b_list[:n])
+    a, b = ring.from_uint64_np(a_np), ring.from_uint64_np(b_np)
+    np.testing.assert_array_equal(ring.to_uint64_np(ring.add(a, b)), a_np + b_np)
+    np.testing.assert_array_equal(ring.to_uint64_np(ring.sub(a, b)), a_np - b_np)
+    np.testing.assert_array_equal(ring.to_uint64_np(ring.mul(a, b)), a_np * b_np)
+    np.testing.assert_array_equal(ring.to_uint64_np(ring.neg(a)), -a_np)
+
+
+@settings(max_examples=30, deadline=None)
+@given(U64, st.integers(min_value=0, max_value=63))
+def test_shifts_match_uint64(v, n):
+    a = ring.from_uint64_np(_np([v]))
+    np.testing.assert_array_equal(ring.to_uint64_np(ring.lshift(a, n)),
+                                  _np([v]) << np.uint64(n))
+    np.testing.assert_array_equal(ring.to_uint64_np(ring.rshift_logical(a, n)),
+                                  _np([v]) >> np.uint64(n))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=-2**62, max_value=2**62 - 1),
+       st.integers(min_value=1, max_value=62))
+def test_arith_shift_is_signed_floor_div(v, n):
+    a = ring.from_uint64_np(np.asarray([v], np.int64).view(np.uint64))
+    got = ring.to_uint64_np(ring.rshift_arith(a, n)).view(np.int64)[0]
+    assert got == v >> n  # python >> is arithmetic for ints
+
+
+@settings(max_examples=30, deadline=None)
+@given(U64, st.integers(min_value=1, max_value=32),
+       st.integers(min_value=0, max_value=31))
+def test_extract_bits(v, w, m):
+    if m + w > 64:
+        w = 64 - m
+    if w < 1:
+        return
+    a = ring.from_uint64_np(_np([v]))
+    got = int(np.asarray(ring.extract_bits(a, m + w, m))[0])
+    assert got == (v >> m) & ((1 << w) - 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(U64)
+def test_balanced_digits_reconstruct(v):
+    a = ring.from_uint64_np(_np([v]))
+    d = np.asarray(ring.balanced_digits(a)).astype(object)
+    assert all(-128 <= int(x) <= 127 for x in d.ravel())
+    recon = sum(int(d[i][0]) * (1 << (8 * i)) for i in range(8)) % (1 << 64)
+    assert recon == v
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=-2**31, max_value=2**31 - 1))
+def test_balanced_digits_i32(w):
+    e = np.asarray(ring.balanced_digits_i32(jnp.asarray([w], jnp.int32))).astype(object)
+    recon = sum(int(e[j][0]) * (1 << (8 * j)) for j in range(5)) % (1 << 64)
+    assert recon == w % (1 << 64)
+
+
+def test_planes_roundtrip():
+    vals = np.arange(64, dtype=np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+    a = ring.from_uint64_np(vals)
+    planes = ring.extract_planes(a, 64, 0)
+    back = ring.from_planes(planes)
+    np.testing.assert_array_equal(ring.to_uint64_np(back), vals)
+
+
+def test_fixed_point_roundtrip():
+    x = np.linspace(-100, 100, 333).astype(np.float32)
+    enc = fixed.encode_np(x)
+    dec = fixed.decode_np(enc)
+    np.testing.assert_allclose(dec, x, atol=2 ** -16)
+    # in-jit encode matches host encode
+    enc2 = fixed.encode(jnp.asarray(x))
+    np.testing.assert_array_equal(ring.to_uint64_np(enc2), ring.to_uint64_np(enc))

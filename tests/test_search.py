@@ -1,0 +1,73 @@
+"""Search engine invariants: eco is zero-error, budget is respected."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RESNET_SMOKE
+from repro.core.hummingbird import HBConfig, HBLayer
+from repro.models import resnet
+from repro.search import finetune as ft, search_budget, search_eco
+from repro.search.simulator import evaluate_accuracy, simulated_hb_relu
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = resnet.init(key, RESNET_SMOKE)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (256, 3, 16, 16))
+    ys = (xs[:, 0, :8, :8].mean((1, 2)) > 0).astype(jnp.int32)
+
+    def afn(p, x, relu_fn=None):
+        return resnet.apply(p, x, RESNET_SMOKE, relu_fn=relu_fn)
+
+    groups = resnet.relu_group_elements(params, RESNET_SMOKE)
+    params, _ = ft.finetune(afn, params, xs[:192], ys[:192],
+                            HBConfig.exact(groups), jax.random.PRNGKey(5),
+                            epochs=4, batch=64, lr=3e-3)
+    return afn, params, xs[192:], ys[192:], groups
+
+
+def test_simulated_relu_matches_protocol_semantics(rng):
+    x = jnp.asarray(rng.uniform(-4, 4, (256,)).astype(np.float32))
+    out = simulated_hb_relu(x, 21, 0, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(out), np.maximum(np.asarray(x), 0),
+                               atol=1e-6)
+    out2 = simulated_hb_relu(x, 21, 12, jax.random.PRNGKey(1))
+    thresh = 2.0 ** (12 - 16)
+    xn = np.asarray(x)
+    exact = np.maximum(xn, 0)
+    pruned = np.where((xn > 0) & (xn < thresh), 0.0, exact)
+    ok = (np.abs(np.asarray(out2) - exact) < 1e-5) | \
+         (np.abs(np.asarray(out2) - pruned) < 1e-5)
+    assert ok.all()
+
+
+def test_eco_is_zero_error(setup):
+    afn, params, xs, ys, groups = setup
+    res = search_eco(afn, params, xs, ys, groups, jax.random.PRNGKey(2))
+    assert res.accuracy == res.baseline_accuracy
+    assert res.budget_fraction < 0.40  # paper: 66-72% of bits discarded
+    assert all(l.m == 0 for l in res.config.layers)
+
+
+def test_budget_search_respects_budget(setup):
+    afn, params, xs, ys, groups = setup
+    res = search_budget(afn, params, xs, ys, groups, jax.random.PRNGKey(3),
+                        budget=8 / 64, bit_choices=(5, 6, 8))
+    assert res.config.meets_budget(8 / 64)
+    assert res.accuracy >= res.baseline_accuracy - 0.10
+    assert res.nodes_visited > 0
+
+
+def test_finetune_runs_and_preserves_shapes(setup):
+    afn, params, xs, ys, groups = setup
+    cfg = HBConfig(tuple(HBLayer(k=19, m=13) for _ in groups), tuple(groups))
+    p2, losses = ft.finetune(afn, params, xs, ys, cfg, jax.random.PRNGKey(4),
+                             epochs=1, batch=32, lr=1e-3)
+    assert len(losses) > 0 and np.isfinite(losses).all()
+    same = jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: a.shape == b.shape, params, p2))
+    assert same

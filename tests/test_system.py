@@ -1,0 +1,101 @@
+"""End-to-end behaviour: the full HummingBird pipeline on one model —
+train -> eco/budget search -> finetune -> MPC serve, plus the cost model's
+paper-level claims and a tiny LM training run whose loss decreases."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RESNET_SMOKE, get
+from repro.core import MPCTensor, costmodel
+from repro.core.hummingbird import HBConfig
+from repro.data import TokenPipeline
+from repro.models import resnet
+from repro.search import finetune as ft, search_budget, search_eco
+from repro.search.simulator import evaluate_accuracy
+from repro.train import loop as loop_lib, optimizer as opt_lib
+
+
+@pytest.fixture(scope="module")
+def trained_resnet():
+    key = jax.random.PRNGKey(0)
+    params = resnet.init(key, RESNET_SMOKE)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (320, 3, 16, 16))
+    ys = (xs[:, 0, :8, :8].mean((1, 2)) > 0).astype(jnp.int32)
+
+    def afn(p, x, relu_fn=None):
+        return resnet.apply(p, x, RESNET_SMOKE, relu_fn=relu_fn)
+
+    groups = resnet.relu_group_elements(params, RESNET_SMOKE)
+    params, _ = ft.finetune(afn, params, xs[:256], ys[:256],
+                            HBConfig.exact(groups), jax.random.PRNGKey(5),
+                            epochs=4, batch=64, lr=3e-3)
+    return afn, params, xs[256:], ys[256:], groups
+
+
+def test_full_hummingbird_pipeline(trained_resnet):
+    """Search a config, verify the REAL MPC protocol reproduces the
+    simulator's prediction on actual secret shares."""
+    afn, params, xs, ys, groups = trained_resnet
+    res = search_eco(afn, params, xs, ys, groups, jax.random.PRNGKey(2))
+    assert res.accuracy == res.baseline_accuracy  # eco: zero error
+
+    # run the real GMW protocol with the found config on a few samples
+    X = MPCTensor.from_plain(jax.random.PRNGKey(3), xs[:2])
+    out = resnet.mpc_apply(params, X, RESNET_SMOKE, jax.random.PRNGKey(4),
+                           hb=res.config)
+    plain = afn(params, xs[:2])
+    got = np.argmax(out.reveal_np(), -1)
+    want = np.argmax(np.asarray(plain), -1)
+    np.testing.assert_array_equal(got, want)
+
+    # communication actually shrank per the cost model
+    r = costmodel.reduction_factors(res.config)
+    assert r["bytes_reduction"] > 1.5
+
+
+def test_budget_pipeline_with_finetune(trained_resnet):
+    afn, params, xs, ys, groups = trained_resnet
+    res = search_budget(afn, params, xs, ys, groups, jax.random.PRNGKey(6),
+                        budget=8 / 64, bit_choices=(6, 8))
+    assert res.config.meets_budget(8 / 64)
+    p2, losses = ft.finetune(afn, params, xs, ys, res.config,
+                             jax.random.PRNGKey(7), epochs=1, batch=32)
+    post = evaluate_accuracy(afn, p2, xs, ys, res.config, jax.random.PRNGKey(8))
+    assert post >= res.accuracy - 0.15  # finetune never catastrophically hurts
+    r = costmodel.reduction_factors(res.config)
+    assert r["bytes_reduction"] > 2.0  # paper Fig 11 floor
+
+
+def test_lm_training_loss_decreases():
+    cfg = dataclasses.replace(get("qwen1.5-0.5b-smoke"), n_layers=2)
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=64, batch=8)
+    lc = loop_lib.LoopConfig(total_steps=30, ckpt_dir=None)
+    opt = opt_lib.AdamW(schedule=opt_lib.Schedule(peak_lr=3e-3,
+                                                  warmup_steps=5,
+                                                  decay_steps=0))
+    rep = loop_lib.run(cfg, pipe, lc, optimizer=opt)
+    first = np.mean(rep.losses[:5])
+    last = np.mean(rep.losses[-5:])
+    assert last < first - 0.2, (first, last)
+
+
+def test_microbatched_step_matches_plain():
+    cfg = dataclasses.replace(get("qwen1.5-0.5b-smoke"), n_layers=2,
+                              remat="none")
+    from repro.launch import train as train_lib
+    opt = opt_lib.SGD(schedule=opt_lib.Schedule(peak_lr=0.1, warmup_steps=0,
+                                                decay_steps=0), momentum=0.0)
+    state = train_lib.init_state(jax.random.PRNGKey(0), cfg, opt)
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=32, batch=8)
+    batch = pipe.batch_at(0)
+    s1, m1 = train_lib.make_train_step(cfg, opt, n_microbatches=1)(state, batch)
+    s2, m2 = train_lib.make_train_step(cfg, opt, n_microbatches=4)(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-3)

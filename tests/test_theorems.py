@@ -1,0 +1,75 @@
+"""Property tests for the paper's Theorem 1 and Theorem 2 on the real
+GMW protocol (sim backend), via hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import beaver, comm as comm_lib, fixed, gmw, shares
+from repro.core.hummingbird import safe_k
+
+CM = comm_lib.SimComm()
+
+
+def _relu_protocol(x_f, k, m, seed=0):
+    E = x_f.shape[0]
+    X = shares.share(jax.random.PRNGKey(seed), fixed.encode_np(x_f))
+    tr = beaver.gen_relu_triples(jax.random.PRNGKey(seed + 1), E, k - m)
+    R = gmw.relu(jax.random.PRNGKey(seed + 2), X, tr, CM, k=k, m=m)
+    return fixed.decode_np(shares.reconstruct(R))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.floats(min_value=-7.875, max_value=7.875, allow_nan=False,
+                          width=32), min_size=4, max_size=32),
+       st.integers(min_value=0, max_value=3))
+def test_theorem1_high_bit_drop_exact(vals, seed):
+    """|x| < 2^(k-1-16)  =>  reduced-ring ReLU == exact ReLU."""
+    x = np.asarray(vals, np.float32)
+    k = 20  # covers |x| < 8 at scale 2^16
+    got = _relu_protocol(x, k=k, m=0, seed=seed)
+    np.testing.assert_allclose(got, np.maximum(x, 0), atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.floats(min_value=-7.875, max_value=7.875, allow_nan=False,
+                          width=32), min_size=4, max_size=32),
+       st.integers(min_value=8, max_value=14),
+       st.integers(min_value=0, max_value=3))
+def test_theorem2_low_bit_drop_is_pruning(vals, m, seed):
+    """Dropping m low bits == magnitude pruning below 2^(m-16) (with the
+    documented +-1-LSB boundary band from the floor(x/2^m)-1 case)."""
+    x = np.asarray(vals, np.float32)
+    k = safe_k(int(np.ceil(np.max(np.abs(x)) * 2 ** 16)) + 1, m=m)
+    got = _relu_protocol(x, k=k, m=m, seed=seed)
+    thresh = 2.0 ** (m - 16)
+    exact = np.maximum(x, 0.0)
+    pruned = np.where((x > 0) & (x < thresh), 0.0, exact)
+    ok = (np.abs(got - exact) < 1e-3) | (np.abs(got - pruned) < 1e-3)
+    assert ok.all(), (x[~ok], got[~ok], m)
+
+
+def test_theorem2_underflow_edge():
+    """x at the negative edge of the reduced range with m > 0 flips sign
+    (the proof's case (2)); one margin bit restores correctness."""
+    x = np.asarray([-7.997, -7.94], np.float32)  # |x_int| ~ 2^19
+    m = 14
+    got_tight = _relu_protocol(x, k=20, m=m)     # range edge: flips to +
+    assert (got_tight != 0).any()                # sign error observable
+    got_margin = _relu_protocol(x, k=21, m=m)    # one headroom bit
+    np.testing.assert_allclose(got_margin, 0.0, atol=1e-4)
+
+
+def test_safe_k_accounts_for_truncation_headroom():
+    assert safe_k(2 ** 19 - 1, m=0) == 20
+    assert safe_k(2 ** 19 - 1, m=14) == 21  # +2^m pushes past 2^19
+
+
+def test_rounds_match_formula():
+    """gmw.n_rounds: prep + (1 + ceil(log2 w)) circuit + b2a + mult."""
+    assert gmw.n_rounds(64) == 10
+    assert gmw.n_rounds(8) == 7
+    assert gmw.n_rounds(6) == 7
+    assert gmw.n_rounds(4) == 6
+    # paper Fig. 11: 1.12-1.56x round reduction; w=64 -> w=6 gives 1.43x
+    assert 1.12 <= gmw.n_rounds(64) / gmw.n_rounds(6) <= 1.56
