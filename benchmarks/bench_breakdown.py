@@ -32,4 +32,15 @@ def run():
         rows.append((f"fig10_{name}", us,
                      f"comm_frac={comm_s/total:.3f};comm_s={comm_s:.2f};"
                      f"compute_s={compute_s:.2f}"))
+        # round-fused engine: 4 sibling streams share rounds (relu_many),
+        # amortizing the per-round RTT term of the comm fraction.
+        S = 4
+        t0 = time.time()
+        fused = costmodel.fused_model_relu_cost(cfg, S)
+        comm_f = costmodel.latency_model(fused, LAN_BW, LAN_RTT, 0.0) / S
+        total_f = comm_f + compute_s
+        us = (time.time() - t0) * 1e6
+        rows.append((f"fig10_{name}_fused{S}", us,
+                     f"comm_frac={comm_f/total_f:.3f};comm_s={comm_f:.2f};"
+                     f"compute_s={compute_s:.2f}"))
     return rows

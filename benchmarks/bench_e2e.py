@@ -64,4 +64,17 @@ def run():
                 rows.append((f"e2e_{rcfg.name}_{net}_{name}", us,
                              f"latency_s={lat:.3f};speedup={base_lat/lat:.2f}x;"
                              f"throughput={BATCH/lat:.1f}sps"))
+                # round-fused serving: S sibling request streams share every
+                # protocol round (relu_many), so the per-round RTT term is
+                # paid once for all S; per-stream latency amortizes it.
+                S = 4
+                t0 = time.time()
+                fused = costmodel.fused_model_relu_cost(cfg, S)
+                lat_s = costmodel.latency_model(fused, bw, rtt,
+                                                S * compute_s) / S
+                us = (time.time() - t0) * 1e6
+                rows.append((f"e2e_{rcfg.name}_{net}_{name}_fused{S}", us,
+                             f"latency_s={lat_s:.3f};"
+                             f"speedup={base_lat/lat_s:.2f}x;"
+                             f"throughput={BATCH/lat_s:.1f}sps"))
     return rows

@@ -1,17 +1,136 @@
 """Benchmark harness: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows."""
+Prints ``name,us_per_call,derived`` CSV rows.
+
+``--quick`` is the CI perf tracker: a CPU-sim measurement of the GMW ReLU
+hot path — rounds, wire bytes and wall-clock for the exact (k=64, m=0) vs
+the 8-bit reduced ring, the round-fused engine vs the frozen seed path
+(core/gmw_ref.py), and the multi-group relu_many swap fusion — written to
+``BENCH_relu.json`` so the perf trajectory is tracked PR over PR.
+"""
+import argparse
+import json
+import os
 import sys
+import time
+
+# make `python benchmarks/run.py` work from anywhere: repo root (for the
+# benchmarks package) and src/ (for repro) onto sys.path
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def _time_best(fn, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def quick(out_path: str = "BENCH_relu.json") -> dict:
+    import jax
+    import numpy as np
+
+    from repro.core import (beaver, comm as comm_lib, costmodel, fixed, gmw,
+                            gmw_ref, ring, shares)
+
+    rng = np.random.default_rng(0)
+    E = 2048
+    results = {"n_elements": E, "configs": {}}
+
+    for name, (k, m) in {"exact_64": (64, 0),
+                         "reduced_8of64": (21, 13)}.items():
+        w = k - m
+        x = rng.uniform(-3.5, 3.5, E).astype(np.float32)
+        X = shares.share(jax.random.PRNGKey(1), fixed.encode_np(x))
+        tr = beaver.gen_relu_triples(jax.random.PRNGKey(2), E, w)
+        cm = comm_lib.CountingComm()
+
+        def run(mod, comm):
+            out = mod.relu(jax.random.PRNGKey(3), X, tr, comm, k=k, m=m)
+            jax.block_until_ready((out.lo, out.hi))
+
+        run(gmw, cm)  # warmup + counter fill
+        wall_fused = _time_best(lambda: run(gmw, comm_lib.SimComm()))
+        run(gmw_ref, comm_lib.SimComm())  # warmup
+        wall_seed = _time_best(lambda: run(gmw_ref, comm_lib.SimComm()))
+        model = costmodel.relu_cost(E, w)
+        results["configs"][name] = {
+            "k": k, "m": m, "width": w,
+            "rounds": cm.n_swaps,
+            "bytes_tx": cm.bytes_tx,
+            "model_rounds": model.rounds,
+            "model_bytes_tx": model.bytes_tx,
+            "wall_s_seed": round(wall_seed, 4),
+            "wall_s_fused": round(wall_fused, 4),
+            "speedup_vs_seed": round(wall_seed / max(wall_fused, 1e-9), 3),
+        }
+
+    # multi-group layer: sibling ReLU groups sharing rounds via relu_many
+    specs = [(E, 64, 0), (E, 21, 13), (E // 2, 21, 13), (E // 2, 20, 14)]
+    keys = [jax.random.PRNGKey(40 + i) for i in range(len(specs))]
+    Xs, trs = [], []
+    for i, (n, k, m) in enumerate(specs):
+        x = rng.uniform(-3.5, 3.5, n).astype(np.float32)
+        Xs.append(shares.share(jax.random.PRNGKey(50 + i), fixed.encode_np(x)))
+        trs.append(beaver.gen_relu_triples(jax.random.PRNGKey(60 + i), n,
+                                           k - m))
+
+    def run_seed(comm):
+        for i, (n, k, m) in enumerate(specs):
+            out = gmw_ref.relu(keys[i], Xs[i], trs[i], comm, k=k, m=m)
+            jax.block_until_ready((out.lo, out.hi))
+
+    def run_fused(comm):
+        outs = gmw.relu_many(keys, Xs, trs, comm,
+                             [(k, m) for _, k, m in specs])
+        jax.block_until_ready([(o.lo, o.hi) for o in outs])
+
+    seed_cm = comm_lib.CountingComm()
+    run_seed(seed_cm)
+    fused_cc = comm_lib.CoalescingComm()
+    run_fused(fused_cc)
+    wall_seed = _time_best(lambda: run_seed(comm_lib.SimComm()))
+    wall_fused = _time_best(lambda: run_fused(comm_lib.SimComm()))
+    results["multigroup"] = {
+        "groups": [{"n": n, "k": k, "m": m} for n, k, m in specs],
+        "swaps_seed": seed_cm.n_swaps,
+        "swaps_fused": fused_cc.n_rounds,
+        "swap_reduction": round(seed_cm.n_swaps / max(fused_cc.n_rounds, 1), 2),
+        "bytes_seed": seed_cm.bytes_tx,
+        "bytes_fused": fused_cc.bytes_tx,
+        "wall_s_seed": round(wall_seed, 4),
+        "wall_s_fused": round(wall_fused, 4),
+        "speedup_vs_seed": round(wall_seed / max(wall_fused, 1e-9), 3),
+    }
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(json.dumps(results, indent=2, sort_keys=True))
+    return results
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("filter", nargs="?", default=None,
+                    help="only run benchmark modules whose name contains this")
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-sim ReLU perf tracker; writes BENCH_relu.json")
+    ap.add_argument("--out", default="BENCH_relu.json",
+                    help="output path for --quick")
+    args = ap.parse_args()
+    if args.quick:
+        quick(args.out)
+        return
     from benchmarks import (bench_accuracy, bench_breakdown, bench_comm,
                             bench_e2e, bench_roofline, bench_search)
     mods = [bench_comm, bench_e2e, bench_breakdown, bench_search,
             bench_accuracy, bench_roofline]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for mod in mods:
-        if only and only not in mod.__name__:
+        if args.filter and args.filter not in mod.__name__:
             continue
         try:
             for name, us, derived in mod.run():

@@ -5,19 +5,23 @@ Layering:
   fixed        - fixed-point codec (CrypTen-compatible scale 2^16)
   shares       - arithmetic + packed binary secret sharing
   beaver       - TTP triple provider
-  comm         - party communicator (sim / mesh backends)
-  gmw          - A2B, DReLU, B2A, ReLU (exact Eq.2 + reduced-ring Eq.3)
+  comm         - party communicator (sim / mesh backends, counting +
+                 coalescing wrappers for the round-fused engine)
+  gmw          - A2B, DReLU, B2A, ReLU (exact Eq.2 + reduced-ring Eq.3),
+                 round-fused engine + relu_many round sharing
+  gmw_ref      - frozen seed protocol (regression oracle / bench baseline)
   hummingbird  - per-layer (k, m) configs and budgets
   costmodel    - closed-form bytes/rounds (validated against HLO collectives)
   ring_linalg  - mod-2^64 matmul/conv with public weights (plane decomposition)
-  mpc_tensor   - user-facing secret-shared tensor
+  mpc_tensor   - user-facing secret-shared tensor (+ relu_many)
 """
-from . import beaver, comm, costmodel, fixed, gmw, hummingbird, ring, ring_linalg, shares
+from . import (beaver, comm, costmodel, fixed, gmw, gmw_ref, hummingbird,
+               ring, ring_linalg, shares)
 from .hummingbird import HBConfig, HBLayer, safe_k
-from .mpc_tensor import MPCTensor, encode_weights
+from .mpc_tensor import MPCTensor, encode_weights, relu_many
 
 __all__ = [
-    "beaver", "comm", "costmodel", "fixed", "gmw", "hummingbird", "ring",
-    "ring_linalg", "shares", "HBConfig", "HBLayer", "safe_k", "MPCTensor",
-    "encode_weights",
+    "beaver", "comm", "costmodel", "fixed", "gmw", "gmw_ref", "hummingbird",
+    "ring", "ring_linalg", "shares", "HBConfig", "HBLayer", "safe_k",
+    "MPCTensor", "encode_weights", "relu_many",
 ]

@@ -11,12 +11,39 @@ shard, exchanges lower to collective-permute):
   ``swap`` is ``lax.ppermute`` so every protocol exchange shows up as a
   collective-permute in the compiled HLO (and therefore in the roofline's
   collective-bytes term).
+
+Round-fused engine support (see core/gmw.py):
+
+- ``CountingComm``: transparent wrapper that counts ``swap`` calls (=
+  protocol rounds) and per-party payload bytes; tests validate these
+  counters against the closed-form cost model.
+- ``CoalescingComm``: deferred-exchange wrapper.  Protocol code *enqueues*
+  heterogeneous uint32 payloads for the current round; ``flush`` flattens
+  and concatenates everything into ONE ``swap`` on the base backend, then
+  hands each caller its slice back.  This is what lets N concurrent ReLU
+  groups share communication rounds instead of paying one round each.
 """
 from __future__ import annotations
+
+from typing import Any, List, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+_U32 = jnp.uint32
+
+
+def payload_bytes(x) -> int:
+    """Per-party one-direction wire bytes of a payload pytree.
+
+    Every leaf carries the party dimension leading; each party transmits
+    its own slice, so bytes = leaf bytes / party-dim size, summed.
+    """
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(x):
+        total += (leaf.size // max(1, leaf.shape[0])) * leaf.dtype.itemsize
+    return total
 
 
 class SimComm:
@@ -51,3 +78,105 @@ class MeshComm:
     def party_is(self, p: int, template: jax.Array) -> jax.Array:
         idx = lax.axis_index(self.axis_name)
         return jnp.full((1,) * template.ndim, idx == p)
+
+
+class CountingComm:
+    """Transparent wrapper counting rounds (= ``swap`` calls) and bytes.
+
+    ``n_swaps`` is the number of exchanges fired on the base backend and
+    ``round_bytes[i]`` the per-party one-direction payload of exchange i;
+    ``bytes_tx`` is their sum.  Used by tests/benchmarks to validate the
+    protocol against ``costmodel.relu_cost`` and to demonstrate the swap
+    reduction of the round-fused engine.
+    """
+
+    def __init__(self, base=None):
+        self.base = base or SimComm()
+        self.n_parties = self.base.n_parties
+        self.reset()
+
+    def reset(self) -> None:
+        self.n_swaps = 0
+        self.round_bytes: List[int] = []
+
+    @property
+    def bytes_tx(self) -> int:
+        return sum(self.round_bytes)
+
+    def swap(self, x):
+        self.n_swaps += 1
+        self.round_bytes.append(payload_bytes(x))
+        return self.base.swap(x)
+
+    def party_is(self, p: int, template: jax.Array) -> jax.Array:
+        return self.base.party_is(p, template)
+
+
+class CoalescingComm:
+    """Deferred-exchange wrapper: one flattened ``swap`` per round.
+
+    Protocol code enqueues the current round's payloads (any pytrees of
+    uint32 arrays with the party dimension leading — packed bitplanes,
+    Ring64 limb pairs, ...) and receives integer handles; ``flush``
+    concatenates every enqueued leaf into a single (P, total_words) buffer,
+    fires ONE exchange on the base backend, and returns the per-handle
+    swapped payloads with their original structure restored.
+
+    ``swap`` remains available as enqueue-then-flush so unfused callers see
+    unchanged semantics (still exactly one round per call).
+
+    Counters (read by tests, the quick benchmark, and the cost-model
+    validation): ``n_rounds`` flushes fired, ``round_bytes`` per-party
+    one-direction bytes of each flush, ``bytes_tx`` their sum.
+    """
+
+    def __init__(self, base=None):
+        self.base = base or SimComm()
+        self.n_parties = self.base.n_parties
+        self._queue: List[Tuple[List[jax.Array], Any]] = []
+        self.n_rounds = 0
+        self.round_bytes: List[int] = []
+
+    @property
+    def bytes_tx(self) -> int:
+        return sum(self.round_bytes)
+
+    def enqueue(self, payload) -> int:
+        """Defer a payload to the current round; returns its handle."""
+        leaves, treedef = jax.tree_util.tree_flatten(payload)
+        for leaf in leaves:
+            if leaf.dtype != _U32:
+                raise TypeError(
+                    f"CoalescingComm payloads must be uint32, got {leaf.dtype}")
+        self._queue.append((leaves, treedef))
+        return len(self._queue) - 1
+
+    def flush(self) -> List[Any]:
+        """Fire the round: one flattened swap; returns payloads by handle."""
+        if not self._queue:
+            return []
+        queue, self._queue = self._queue, []
+        flat = [leaf.reshape(leaf.shape[0], -1)
+                for leaves, _ in queue for leaf in leaves]
+        buf = jnp.concatenate(flat, axis=1) if len(flat) > 1 else flat[0]
+        self.n_rounds += 1
+        self.round_bytes.append(payload_bytes(buf))
+        opened = self.base.swap(buf)
+        results = []
+        off = 0
+        for leaves, treedef in queue:
+            out_leaves = []
+            for leaf in leaves:
+                n = leaf.size // leaf.shape[0]
+                out_leaves.append(opened[:, off:off + n].reshape(leaf.shape))
+                off += n
+            results.append(jax.tree_util.tree_unflatten(treedef, out_leaves))
+        return results
+
+    def swap(self, x):
+        """Immediate exchange (enqueue + flush): still one round."""
+        h = self.enqueue(x)
+        return self.flush()[h]
+
+    def party_is(self, p: int, template: jax.Array) -> jax.Array:
+        return self.base.party_is(p, template)

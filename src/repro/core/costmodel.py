@@ -43,25 +43,34 @@ def relu_cost(n_elements: int, w: int = RING_BITS,
               cone: bool = False) -> CommCost:
     """One ReLU over n_elements with a w-bit DReLU ring (w = k - m).
 
-    cone=True prices the MSB-cone-pruned adder (same rounds, O(w) gates
-    instead of O(w log w) — EXPERIMENTS.md §Perf iteration C2)."""
+    w = 0 is the culled identity layer (HBLayer.is_identity): zero bytes,
+    zero rounds.  cone=True prices the MSB-cone-pruned adder (same rounds,
+    O(w) gates instead of O(w log w) — EXPERIMENTS.md §Perf iteration C2)."""
+    if w == 0:
+        return CommCost(0, 0, {"circuit": 0, "others": 0, "b2a": 0, "mult": 0})
     W = shares.packed_words(n_elements)
     L = beaver.n_levels(w)
-    prep = w * W * WORD_BYTES                      # A2B mask exchange ("Others")
-    if cone and w > 1:
+    level_rounds = L
+    if w == 1:
+        init_and = level_ands = 0                  # MSB is p0 directly: no ANDs
+    elif cone:
         from . import gmw
         init_pos, level_sets = gmw.cone_sets(w)
         init_and = 2 * len(init_pos) * W * WORD_BYTES
-        level_ands = sum(2 * (2 * max(len(pos), 1)) * W * WORD_BYTES
-                         for pos in level_sets)
+        # the protocol skips levels whose cone slice is empty (e.g. the top
+        # level for w in {2, 3, 5, 9, ...}): no bytes AND no round for them
+        level_ands = sum(2 * (2 * len(pos)) * W * WORD_BYTES
+                         for pos in level_sets if pos)
+        level_rounds = sum(1 for pos in level_sets if pos)
     else:
         init_and = 2 * w * W * WORD_BYTES          # open (d, e) of initial AND
         level_ands = L * 2 * (2 * w) * W * WORD_BYTES
+    prep = w * W * WORD_BYTES                      # A2B mask exchange ("Others")
     circuit = init_and + level_ands
     b2a = 2 * n_elements * RING_BYTES              # one Beaver mult on Z/2^64
     mult = 2 * n_elements * RING_BYTES             # final x * DReLU(x)
     total = prep + circuit + b2a + mult
-    rounds = 1 + (1 + L if w > 1 else 0) + 1 + 1
+    rounds = 1 + (1 + level_rounds if w > 1 else 0) + 1 + 1
     return CommCost(total, rounds, {
         "circuit": circuit, "others": prep, "b2a": b2a, "mult": mult,
     })
@@ -72,6 +81,35 @@ def model_relu_cost(cfg: HBConfig) -> CommCost:
     total = CommCost.zero()
     for layer, n in zip(cfg.layers, cfg.group_elements):
         total = total + relu_cost(n, layer.width)
+    return total
+
+
+def relu_many_cost(specs, cone: bool = False) -> CommCost:
+    """Round-fused cost of sibling ReLU groups evaluated by ``relu_many``.
+
+    specs: iterable of (n_elements, width).  Bytes add up (each group still
+    sends its own payload), but every protocol round is ONE coalesced
+    exchange across all groups, so rounds = max over groups — this is the
+    counter pair CoalescingComm reports and tests validate against.
+    """
+    costs = [relu_cost(n, w, cone=cone) for n, w in specs]
+    total = CommCost.zero()
+    for c in costs:
+        total = total + c
+    return CommCost(total.bytes_tx,
+                    max((c.rounds for c in costs), default=0),
+                    total.breakdown)
+
+
+def fused_model_relu_cost(cfg: HBConfig, streams: int,
+                          cone: bool = False) -> CommCost:
+    """Model-level round-fused cost: `streams` sibling inference streams
+    evaluated by relu_many at every ReLU layer.  Bytes scale with the
+    stream count; rounds are paid once per layer for all streams."""
+    total = CommCost.zero()
+    for layer, n in zip(cfg.layers, cfg.group_elements):
+        total = total + relu_many_cost([(n, layer.width)] * streams,
+                                       cone=cone)
     return total
 
 

@@ -1,5 +1,5 @@
 """GMW protocol: A2B, DReLU, B2A, exact ReLU (Eq. 2) and HummingBird's
-reduced-ring approximate ReLU (Eq. 3).
+reduced-ring approximate ReLU (Eq. 3) — round-fused engine.
 
 All functions operate on arrays with a leading party dimension and a
 ``Comm`` backend (SimComm on one host, MeshComm inside shard_map), so the
@@ -12,11 +12,36 @@ Communication structure (matches §2.2/§2.3 of the paper):
   - final Mult x*DReLU(x): one Beaver mult on Z/2^64          (1 round)
 HummingBird only shrinks the Circuit/prep terms (w = k-m instead of 64),
 exactly as the paper's Figure 3/4 describe.
+
+Round-fused engine
+------------------
+Every protocol primitive here is a *round generator* (``*_rounds``): it
+yields exactly one wire payload per communication round and is sent back
+the peer's payload.  Two drivers execute the generators:
+
+  - ``drive(gen, comm)``: one ``comm.swap`` per yield — the classic
+    single-stream path; rounds and wire bytes are identical to the seed
+    implementation (``core/gmw_ref.py``), and exact-path (k=64, m=0)
+    outputs are bit-identical to it.
+  - ``run_streams(comm, streams)`` / ``relu_many``: N generators advance
+    in lockstep and each round's heterogeneous payloads (different widths,
+    element counts, even different protocol phases) are coalesced by
+    ``comm.CoalescingComm`` into ONE flattened exchange.  Sibling ReLU
+    groups therefore share rounds: total rounds = max over groups, not the
+    sum, with unchanged total bytes.
+
+Per-round local compute is fused: the dense Kogge-Stone level uses
+``kernels.ops.ks_mask`` (plane-shift + Beaver (d, e) masking in one VMEM
+pass) before the exchange and ``kernels.ops.ks_combine`` (opening XOR +
+Beaver local evaluation + g/p level combine in one pass) after it, instead
+of the ~6 separate jnp ops per round the seed path issued.  The
+cone-pruned path keeps a compile-time-static position layout: per-plane
+tensors tracked in Python dicts at trace time, so XLA sees only static
+slices/concats — no runtime ``.at[].set`` scatter.
 """
 from __future__ import annotations
 
-import math
-from typing import Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,35 +52,81 @@ _U32 = jnp.uint32
 
 
 # ---------------------------------------------------------------------------
+# Round-generator drivers
+# ---------------------------------------------------------------------------
+
+def drive(gen, comm):
+    """Run one round generator to completion: one ``comm.swap`` per round."""
+    try:
+        payload = gen.send(None)
+        while True:
+            payload = gen.send(comm.swap(payload))
+    except StopIteration as e:
+        return e.value
+
+
+def run_streams(comm, streams: Sequence) -> List:
+    """Advance N round generators in lockstep, coalescing each round.
+
+    Every round, all pending streams' payloads are enqueued on a
+    ``CoalescingComm`` and fired as ONE flattened exchange; streams that
+    finish early (narrower rings -> fewer levels) simply drop out.  Returns
+    each stream's result, in order.
+    """
+    cc = (comm if isinstance(comm, comm_lib.CoalescingComm)
+          else comm_lib.CoalescingComm(comm))
+    results: List = [None] * len(streams)
+    live = {}
+    for i, s in enumerate(streams):
+        try:
+            live[i] = (s, s.send(None))
+        except StopIteration as e:  # zero-round stream
+            results[i] = e.value
+    while live:
+        handles = {i: cc.enqueue(payload) for i, (_, payload) in live.items()}
+        opened = cc.flush()
+        nxt = {}
+        for i, (s, _) in live.items():
+            try:
+                nxt[i] = (s, s.send(opened[handles[i]]))
+            except StopIteration as e:
+                results[i] = e.value
+        live = nxt
+    return results
+
+
+def _sel_mask(comm, template: jax.Array) -> jax.Array:
+    """All-ones on party 0, zeros on party 1 (Beaver open correction)."""
+    return jnp.where(comm.party_is(0, template),
+                     jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+
+
+# ---------------------------------------------------------------------------
 # Secure AND on packed binary shares (one communication round)
 # ---------------------------------------------------------------------------
 
-def and_open(x, y, triple: beaver.BinTriple, comm) -> jax.Array:
-    """z = x & y on XOR-shared packed words. One swap (round) of (d, e)."""
+def _and_open_rounds(x, y, triple: beaver.BinTriple, comm):
+    """Round generator for z = x & y on XOR-shared packed words."""
     from repro.kernels import ops as kops  # lazy: kernels import core.ring
 
     d = x ^ triple.a
     e = y ^ triple.b
-    opened = comm.swap(jnp.stack([d, e], axis=1))  # single exchange
+    opened = yield jnp.stack([d, e], axis=1)  # single exchange
     d_open = d ^ opened[:, 0]
     e_open = e ^ opened[:, 1]
-    p0 = comm.party_is(0, x)
-    sel = jnp.where(p0, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+    sel = _sel_mask(comm, x)
     # local evaluation fused in one VMEM pass (kernels/gmw_round.py)
     return kops.beaver_and(d_open, e_open, triple.a, triple.b, triple.c, sel)
+
+
+def and_open(x, y, triple: beaver.BinTriple, comm) -> jax.Array:
+    """z = x & y on XOR-shared packed words. One swap (round) of (d, e)."""
+    return drive(_and_open_rounds(x, y, triple, comm), comm)
 
 
 # ---------------------------------------------------------------------------
 # Kogge-Stone adder over packed bitplanes -> MSB (sign) of x + y mod 2^w
 # ---------------------------------------------------------------------------
-
-def _shift_planes(x: jax.Array, d: int) -> jax.Array:
-    """Plane-axis shift: out[..., i, :] = x[..., i-d, :], zeros below."""
-    if d == 0:
-        return x
-    pad = jnp.zeros(x.shape[:-2] + (d,) + x.shape[-1:], x.dtype)
-    return jnp.concatenate([pad, x[..., :-d, :]], axis=-2)
-
 
 def cone_sets(w: int):
     """Backward cone of the single output G[w-2] through the Kogge-Stone
@@ -76,6 +147,64 @@ def cone_sets(w: int):
     return sorted(needed), level_sets
 
 
+def _adder_msb_rounds(xw, yw, triples: beaver.ReluTriples, comm, w: int,
+                      cone: bool):
+    """Round generator for the MSB of (x + y mod 2^w).
+
+    Dense path: one fused pre-exchange pass (plane-shift + (d, e) masking)
+    and one fused post-exchange pass (open + Beaver eval + g/p combine) per
+    level.  Cone path: compile-time-static layout — positions live in
+    trace-time dicts of per-plane (P, W) tensors, so pruned levels are pure
+    static stack/slice, never a runtime scatter.
+    """
+    from repro.kernels import ops as kops
+
+    p0 = xw ^ yw                      # initial propagate (local)
+    if w == 1:
+        return p0[..., 0, :]
+    L = beaver.n_levels(w)
+    if not cone:
+        g = yield from _and_open_rounds(xw, yw, triples.bin_init, comm)
+        p = p0
+        sel = _sel_mask(comm, xw)
+        for lvl in range(L):
+            d = 1 << lvl
+            tri = jax.tree_util.tree_map(lambda t: t[lvl], triples.bin_levels)
+            # fused: shift + lhs/rhs build + triple masking, one pass
+            d_half, e_half = kops.ks_mask(g, p, tri.a, tri.b, d)
+            opened = yield jnp.stack([d_half, e_half], axis=1)  # one round
+            # fused: opening XOR + Beaver eval + level combine, one pass
+            g, p = kops.ks_combine(d_half, opened[:, 0], e_half, opened[:, 1],
+                                   tri.a, tri.b, tri.c, sel, g)
+        # carry into bit (w-1) is prefix-generate of bit (w-2)
+        return p0[..., w - 1, :] ^ g[..., w - 2, :]
+
+    init_pos, level_sets = cone_sets(w)
+    # static cone layout: dense sub-plane tensors per level, positions are
+    # Python-side metadata (g_map/p_map) resolved entirely at trace time
+    g_sub = yield from _and_open_rounds(
+        jnp.stack([xw[..., i, :] for i in init_pos], axis=-2),
+        jnp.stack([yw[..., i, :] for i in init_pos], axis=-2),
+        triples.bin_init, comm)
+    g_map = {i: g_sub[..., j, :] for j, i in enumerate(init_pos)}
+    p_map = {i: p0[..., i, :] for i in range(w)}
+    for lvl in range(L):
+        d = 1 << lvl
+        pos = level_sets[lvl]
+        if not pos:
+            continue
+        n = len(pos)
+        lhs = jnp.stack([p_map[i] for i in pos] * 2, axis=-2)
+        rhs = jnp.stack([g_map[i - d] for i in pos] +
+                        [p_map[i - d] for i in pos], axis=-2)
+        out = yield from _and_open_rounds(lhs, rhs, triples.bin_levels[lvl],
+                                          comm)                # one round
+        for j, i in enumerate(pos):
+            g_map[i] = g_map[i] ^ out[..., j, :]
+            p_map[i] = out[..., n + j, :]
+    return p0[..., w - 1, :] ^ g_map[w - 2]
+
+
 def adder_msb(xw: jax.Array, yw: jax.Array, triples: beaver.ReluTriples,
               comm, w: int, cone: bool = False) -> jax.Array:
     """XOR shares of the MSB of (x + y mod 2^w).
@@ -87,76 +216,40 @@ def adder_msb(xw: jax.Array, yw: jax.Array, triples: beaver.ReluTriples,
     (same round count, ~log(w)/2 x fewer gate-bits on the wire — a
     beyond-paper optimization, see EXPERIMENTS.md §Perf iteration C2).
     """
-    p0 = xw ^ yw                      # initial propagate (local)
-    if w == 1:
-        return p0[..., 0, :]
-    L = beaver.n_levels(w)
-    if not cone:
-        g = and_open(xw, yw, triples.bin_init, comm)   # initial generate
-        p = p0
-        for lvl in range(L):
-            d = 1 << lvl
-            g_sh = _shift_planes(g, d)
-            p_sh = _shift_planes(p, d)
-            lhs = jnp.concatenate([p, p], axis=-2)          # (P, 2w, W)
-            rhs = jnp.concatenate([g_sh, p_sh], axis=-2)
-            tri = jax.tree_util.tree_map(lambda t: t[lvl], triples.bin_levels)
-            out = and_open(lhs, rhs, tri, comm)             # one round
-            g = g ^ out[..., :w, :]
-            p = out[..., w:, :]
-        # carry into bit (w-1) is prefix-generate of bit (w-2)
-        return p0[..., w - 1, :] ^ g[..., w - 2, :]
-
-    init_pos, level_sets = cone_sets(w)
-    ip = jnp.asarray(init_pos)
-    g_sub = and_open(xw[..., ip, :], yw[..., ip, :], triples.bin_init, comm)
-    g = jnp.zeros_like(xw).at[..., ip, :].set(g_sub)
-    p = p0
-    for lvl in range(L):
-        d = 1 << lvl
-        pos = level_sets[lvl]
-        if not pos:
-            continue
-        ii = jnp.asarray(pos)
-        im = jnp.asarray([i - d for i in pos])
-        p_i = p[..., ii, :]
-        lhs = jnp.concatenate([p_i, p_i], axis=-2)
-        rhs = jnp.concatenate([g[..., im, :], p[..., im, :]], axis=-2)
-        tri = triples.bin_levels[lvl]
-        out = and_open(lhs, rhs, tri, comm)                 # one round
-        n = len(pos)
-        g = g.at[..., ii, :].set(g[..., ii, :] ^ out[..., :n, :])
-        p = p.at[..., ii, :].set(out[..., n:, :])
-    return p0[..., w - 1, :] ^ g[..., w - 2, :]
+    return drive(_adder_msb_rounds(xw, yw, triples, comm, w, cone), comm)
 
 
 # ---------------------------------------------------------------------------
 # A2B prep: XOR-share each party's (reduced-ring) arithmetic share
 # ---------------------------------------------------------------------------
 
-def a2b_prepare(key, v_packed: jax.Array, comm) -> Tuple[jax.Array, jax.Array]:
-    """From each party's packed plaintext planes (P, w, W) of its own
-    arithmetic share, produce XOR shares of party0's and party1's values
-    held by both parties.  One round (mask exchange)."""
+def _a2b_prepare_rounds(key, v_packed: jax.Array, comm):
     r = jax.random.bits(key, v_packed.shape, dtype=_U32)
     masked = v_packed ^ r
-    other_mask = comm.swap(r)
+    other_mask = yield r
     p0 = comm.party_is(0, v_packed)
     x0_shares = jnp.where(p0, masked, other_mask)   # shares of party0's value
     x1_shares = jnp.where(p0, other_mask, masked)   # shares of party1's value
     return x0_shares, x1_shares
 
 
+def a2b_prepare(key, v_packed: jax.Array, comm) -> Tuple[jax.Array, jax.Array]:
+    """From each party's packed plaintext planes (P, w, W) of its own
+    arithmetic share, produce XOR shares of party0's and party1's values
+    held by both parties.  One round (mask exchange)."""
+    return drive(_a2b_prepare_rounds(key, v_packed, comm), comm)
+
+
 # ---------------------------------------------------------------------------
 # Beaver multiplication on Z/2^64 (one round)
 # ---------------------------------------------------------------------------
 
-def beaver_mul(x: ring.Ring64, y: ring.Ring64, triple: beaver.ArithTriple,
-               comm) -> ring.Ring64:
+def _beaver_mul_rounds(x: ring.Ring64, y: ring.Ring64,
+                       triple: beaver.ArithTriple, comm):
     e = ring.sub(x, triple.a)
     f = ring.sub(y, triple.b)
     ef = ring.Ring64(jnp.stack([e.lo, f.lo], 1), jnp.stack([e.hi, f.hi], 1))
-    other = comm.swap(ef)                            # single exchange
+    other = yield ef                                 # single exchange
     e_open = ring.add(e, ring.Ring64(other.lo[:, 0], other.hi[:, 0]))
     f_open = ring.add(f, ring.Ring64(other.lo[:, 1], other.hi[:, 1]))
     z = ring.add(triple.c,
@@ -167,9 +260,25 @@ def beaver_mul(x: ring.Ring64, y: ring.Ring64, triple: beaver.ArithTriple,
                        jnp.where(p0, ring.add(z, corr).hi, z.hi))
 
 
+def beaver_mul(x: ring.Ring64, y: ring.Ring64, triple: beaver.ArithTriple,
+               comm) -> ring.Ring64:
+    return drive(_beaver_mul_rounds(x, y, triple, comm), comm)
+
+
 # ---------------------------------------------------------------------------
 # B2A of a single packed bit plane -> arithmetic shares of the bit
 # ---------------------------------------------------------------------------
+
+def _b2a_bit_rounds(bits: jax.Array, triple: beaver.ArithTriple, comm):
+    zeros = jnp.zeros_like(bits)
+    p0 = comm.party_is(0, bits)
+    x = ring.Ring64(jnp.where(p0, bits, zeros), zeros)
+    y = ring.Ring64(jnp.where(p0, zeros, bits), zeros)
+    xy = yield from _beaver_mul_rounds(x, y, triple, comm)
+    s = ring.add(ring.Ring64(bits, zeros), ring.neg(ring.lshift(xy, 1)))
+    # NB: x + y == (b0, b1) == Ring64(bits, 0) summed across parties
+    return s
+
 
 def b2a_bit(bits: jax.Array, triple: beaver.ArithTriple, comm) -> ring.Ring64:
     """bits: (P, E) XOR shares in {0,1}. Returns Ring64 additive shares.
@@ -177,27 +286,15 @@ def b2a_bit(bits: jax.Array, triple: beaver.ArithTriple, comm) -> ring.Ring64:
     b = b0 xor b1 = b0 + b1 - 2*b0*b1; the cross term uses one Beaver mult
     with X = (b0, 0), Y = (0, b1) as trivially-valid arithmetic shares.
     """
-    zeros = jnp.zeros_like(bits)
-    p0 = comm.party_is(0, bits)
-    x = ring.Ring64(jnp.where(p0, bits, zeros), zeros)
-    y = ring.Ring64(jnp.where(p0, zeros, bits), zeros)
-    xy = beaver_mul(x, y, triple, comm)
-    s = ring.add(ring.Ring64(bits, zeros), ring.neg(ring.lshift(xy, 1)))
-    # NB: x + y == (b0, b1) == Ring64(bits, 0) summed across parties
-    return s
+    return drive(_b2a_bit_rounds(bits, triple, comm), comm)
 
 
 # ---------------------------------------------------------------------------
 # DReLU / ReLU (exact and reduced-ring)
 # ---------------------------------------------------------------------------
 
-def drelu(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
-          k: int = 64, m: int = 0, cone: bool = False) -> ring.Ring64:
-    """Arithmetic shares of DReLU(x) evaluated on the reduced ring [k:m].
-
-    k = 64, m = 0 reproduces the exact CrypTen baseline; k - m << 64 is
-    HummingBird's approximation (Eq. 3).  x: Ring64 shares (P, E).
-    """
+def _drelu_rounds(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
+                  k: int, m: int, cone: bool):
     w = k - m
     n = x.shape[-1]
     if w <= 32:
@@ -207,15 +304,35 @@ def drelu(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
         planes = ring.extract_planes(x, k, m)       # (w, P, E)
     planes = jnp.moveaxis(planes, 0, 1)             # (P, w, E)
     packed = shares.pack_bits(planes)               # (P, w, W)
-    x0s, x1s = a2b_prepare(key, packed, comm)       # 1 round
-    sign_packed = adder_msb(x0s, x1s, triples, comm, w, cone=cone)
+    x0s, x1s = yield from _a2b_prepare_rounds(key, packed, comm)    # 1 round
+    sign_packed = yield from _adder_msb_rounds(x0s, x1s, triples, comm, w,
+                                               cone)
     sign_bits = shares.unpack_bits(sign_packed, n)  # (P, E)
-    s = b2a_bit(sign_bits, triples.b2a, comm)       # shares of sign in {0,1}
+    s = yield from _b2a_bit_rounds(sign_bits, triples.b2a, comm)    # 1 round
     one = ring.from_int32(jnp.ones((), jnp.int32))
     p0 = comm.party_is(0, s.lo)
     d = ring.Ring64(jnp.where(p0, ring.sub(one, s).lo, ring.neg(s).lo),
                     jnp.where(p0, ring.sub(one, s).hi, ring.neg(s).hi))
     return d
+
+
+def drelu(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
+          k: int = 64, m: int = 0, cone: bool = False) -> ring.Ring64:
+    """Arithmetic shares of DReLU(x) evaluated on the reduced ring [k:m].
+
+    k = 64, m = 0 reproduces the exact CrypTen baseline; k - m << 64 is
+    HummingBird's approximation (Eq. 3).  x: Ring64 shares (P, E).
+    """
+    return drive(_drelu_rounds(key, x, triples, comm, k, m, cone), comm)
+
+
+def relu_rounds(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
+                k: int = 64, m: int = 0, cone: bool = False):
+    """Round generator for one full ReLU — compose with ``run_streams`` to
+    share rounds across concurrent ReLU groups."""
+    d = yield from _drelu_rounds(key, x, triples, comm, k, m, cone)
+    out = yield from _beaver_mul_rounds(x, d, triples.mult, comm)
+    return out
 
 
 def relu(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
@@ -225,10 +342,44 @@ def relu(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
     The final multiplication always uses the full-ring share x, only the
     sign estimation is approximated - exactly the paper's formulation.
     """
-    d = drelu(key, x, triples, comm, k, m, cone=cone)
-    return beaver_mul(x, d, triples.mult, comm)
+    return drive(relu_rounds(key, x, triples, comm, k, m, cone), comm)
+
+
+def relu_many(keys, xs: Sequence[ring.Ring64],
+              triples_list: Sequence[Optional[beaver.ReluTriples]], comm,
+              kms: Sequence[Tuple[int, int]],
+              cone: bool = False) -> List[ring.Ring64]:
+    """Round-shared evaluation of N concurrent ReLU groups.
+
+    Each group may have its own element count and reduced ring (k, m);
+    every protocol round across all groups is ONE coalesced exchange, so
+    total rounds = max over groups (vs. the sum when evaluated serially)
+    with unchanged total bytes.  Width-0 groups (k == m) are the culled
+    identity and cost nothing.  Returns per-group Ring64 results in order.
+    """
+    if not (len(keys) == len(xs) == len(triples_list) == len(kms)):
+        raise ValueError(
+            f"relu_many: mismatched lengths keys={len(keys)} xs={len(xs)} "
+            f"triples={len(triples_list)} kms={len(kms)}")
+    cc = (comm if isinstance(comm, comm_lib.CoalescingComm)
+          else comm_lib.CoalescingComm(comm))
+    results: List[Optional[ring.Ring64]] = [None] * len(xs)
+    streams, order = [], []
+    for i, (key, x, tr, (k, m)) in enumerate(
+            zip(keys, xs, triples_list, kms)):
+        if k == m:                       # ReLU culled to identity
+            results[i] = x
+            continue
+        streams.append(relu_rounds(key, x, tr, cc, k=k, m=m, cone=cone))
+        order.append(i)
+    for j, out in enumerate(run_streams(cc, streams)):
+        results[order[j]] = out
+    return results
 
 
 def n_rounds(w: int) -> int:
-    """Communication rounds for one ReLU: prep + init-AND + levels + B2A + mult."""
+    """Communication rounds for one ReLU: prep + init-AND + levels + B2A +
+    mult; 0 for a culled (width-0) identity layer."""
+    if w == 0:
+        return 0
     return 3 + (1 + beaver.n_levels(w) if w > 1 else 0)

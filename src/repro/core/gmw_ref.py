@@ -1,0 +1,159 @@
+"""Frozen pre-fusion GMW reference (the seed implementation).
+
+This module preserves the original one-``swap``-per-call protocol exactly
+as it shipped before the round-fused engine landed in ``core/gmw.py``:
+each Kogge-Stone level's opening is its own exchange, the cone-pruned path
+uses runtime ``.at[].set`` scatters, and per-round local compute is a chain
+of separate jnp ops.
+
+It exists for two reasons:
+  1. regression oracle — tests/test_fused_engine.py asserts the fused
+     engine's outputs are *bit-identical* to this module for the exact
+     (k=64, m=0) path and the reduced-ring configs;
+  2. benchmark baseline — benchmarks/run.py --quick measures the fused
+     engine's swap-count and wall-clock improvement against this path.
+
+Do not optimise this file; it is intentionally the "before" snapshot.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import beaver, ring, shares
+from .gmw import cone_sets
+
+_U32 = jnp.uint32
+
+
+def and_open(x, y, triple: beaver.BinTriple, comm) -> jax.Array:
+    """z = x & y on XOR-shared packed words. One swap (round) of (d, e)."""
+    from repro.kernels import ops as kops  # lazy: kernels import core.ring
+
+    d = x ^ triple.a
+    e = y ^ triple.b
+    opened = comm.swap(jnp.stack([d, e], axis=1))  # single exchange
+    d_open = d ^ opened[:, 0]
+    e_open = e ^ opened[:, 1]
+    p0 = comm.party_is(0, x)
+    sel = jnp.where(p0, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+    return kops.beaver_and(d_open, e_open, triple.a, triple.b, triple.c, sel)
+
+
+def _shift_planes(x: jax.Array, d: int) -> jax.Array:
+    """Plane-axis shift: out[..., i, :] = x[..., i-d, :], zeros below."""
+    if d == 0:
+        return x
+    pad = jnp.zeros(x.shape[:-2] + (d,) + x.shape[-1:], x.dtype)
+    return jnp.concatenate([pad, x[..., :-d, :]], axis=-2)
+
+
+def adder_msb(xw: jax.Array, yw: jax.Array, triples: beaver.ReluTriples,
+              comm, w: int, cone: bool = False) -> jax.Array:
+    """XOR shares of the MSB of (x + y mod 2^w) — seed implementation."""
+    p0 = xw ^ yw                      # initial propagate (local)
+    if w == 1:
+        return p0[..., 0, :]
+    L = beaver.n_levels(w)
+    if not cone:
+        g = and_open(xw, yw, triples.bin_init, comm)   # initial generate
+        p = p0
+        for lvl in range(L):
+            d = 1 << lvl
+            g_sh = _shift_planes(g, d)
+            p_sh = _shift_planes(p, d)
+            lhs = jnp.concatenate([p, p], axis=-2)          # (P, 2w, W)
+            rhs = jnp.concatenate([g_sh, p_sh], axis=-2)
+            tri = jax.tree_util.tree_map(lambda t: t[lvl], triples.bin_levels)
+            out = and_open(lhs, rhs, tri, comm)             # one round
+            g = g ^ out[..., :w, :]
+            p = out[..., w:, :]
+        return p0[..., w - 1, :] ^ g[..., w - 2, :]
+
+    init_pos, level_sets = cone_sets(w)
+    ip = jnp.asarray(init_pos)
+    g_sub = and_open(xw[..., ip, :], yw[..., ip, :], triples.bin_init, comm)
+    g = jnp.zeros_like(xw).at[..., ip, :].set(g_sub)
+    p = p0
+    for lvl in range(L):
+        d = 1 << lvl
+        pos = level_sets[lvl]
+        if not pos:
+            continue
+        ii = jnp.asarray(pos)
+        im = jnp.asarray([i - d for i in pos])
+        p_i = p[..., ii, :]
+        lhs = jnp.concatenate([p_i, p_i], axis=-2)
+        rhs = jnp.concatenate([g[..., im, :], p[..., im, :]], axis=-2)
+        tri = triples.bin_levels[lvl]
+        out = and_open(lhs, rhs, tri, comm)                 # one round
+        n = len(pos)
+        g = g.at[..., ii, :].set(g[..., ii, :] ^ out[..., :n, :])
+        p = p.at[..., ii, :].set(out[..., n:, :])
+    return p0[..., w - 1, :] ^ g[..., w - 2, :]
+
+
+def a2b_prepare(key, v_packed: jax.Array, comm) -> Tuple[jax.Array, jax.Array]:
+    r = jax.random.bits(key, v_packed.shape, dtype=_U32)
+    masked = v_packed ^ r
+    other_mask = comm.swap(r)
+    p0 = comm.party_is(0, v_packed)
+    x0_shares = jnp.where(p0, masked, other_mask)
+    x1_shares = jnp.where(p0, other_mask, masked)
+    return x0_shares, x1_shares
+
+
+def beaver_mul(x: ring.Ring64, y: ring.Ring64, triple: beaver.ArithTriple,
+               comm) -> ring.Ring64:
+    e = ring.sub(x, triple.a)
+    f = ring.sub(y, triple.b)
+    ef = ring.Ring64(jnp.stack([e.lo, f.lo], 1), jnp.stack([e.hi, f.hi], 1))
+    other = comm.swap(ef)                            # single exchange
+    e_open = ring.add(e, ring.Ring64(other.lo[:, 0], other.hi[:, 0]))
+    f_open = ring.add(f, ring.Ring64(other.lo[:, 1], other.hi[:, 1]))
+    z = ring.add(triple.c,
+                 ring.add(ring.mul(e_open, triple.b), ring.mul(f_open, triple.a)))
+    p0 = comm.party_is(0, z.lo)
+    corr = ring.mul(e_open, f_open)
+    return ring.Ring64(jnp.where(p0, ring.add(z, corr).lo, z.lo),
+                       jnp.where(p0, ring.add(z, corr).hi, z.hi))
+
+
+def b2a_bit(bits: jax.Array, triple: beaver.ArithTriple, comm) -> ring.Ring64:
+    zeros = jnp.zeros_like(bits)
+    p0 = comm.party_is(0, bits)
+    x = ring.Ring64(jnp.where(p0, bits, zeros), zeros)
+    y = ring.Ring64(jnp.where(p0, zeros, bits), zeros)
+    xy = beaver_mul(x, y, triple, comm)
+    s = ring.add(ring.Ring64(bits, zeros), ring.neg(ring.lshift(xy, 1)))
+    return s
+
+
+def drelu(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
+          k: int = 64, m: int = 0, cone: bool = False) -> ring.Ring64:
+    w = k - m
+    n = x.shape[-1]
+    if w <= 32:
+        v = ring.extract_bits(x, k, m)              # (P, E) uint32, local
+        planes = ring.bitplanes_u32(v, w)           # (w, P, E)
+    else:
+        planes = ring.extract_planes(x, k, m)       # (w, P, E)
+    planes = jnp.moveaxis(planes, 0, 1)             # (P, w, E)
+    packed = shares.pack_bits(planes)               # (P, w, W)
+    x0s, x1s = a2b_prepare(key, packed, comm)       # 1 round
+    sign_packed = adder_msb(x0s, x1s, triples, comm, w, cone=cone)
+    sign_bits = shares.unpack_bits(sign_packed, n)  # (P, E)
+    s = b2a_bit(sign_bits, triples.b2a, comm)       # shares of sign in {0,1}
+    one = ring.from_int32(jnp.ones((), jnp.int32))
+    p0 = comm.party_is(0, s.lo)
+    d = ring.Ring64(jnp.where(p0, ring.sub(one, s).lo, ring.neg(s).lo),
+                    jnp.where(p0, ring.sub(one, s).hi, ring.neg(s).hi))
+    return d
+
+
+def relu(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
+         k: int = 64, m: int = 0, cone: bool = False) -> ring.Ring64:
+    d = drelu(key, x, triples, comm, k, m, cone=cone)
+    return beaver_mul(x, d, triples.mult, comm)

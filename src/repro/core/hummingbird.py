@@ -23,7 +23,9 @@ class HBLayer:
     m: int = 0
 
     def __post_init__(self):
-        assert 0 <= self.m < self.k <= RING_BITS, (self.k, self.m)
+        # k == m (width 0) is the paper's ReLU-culling mode: the layer is
+        # assigned zero DReLU bits and degrades to the identity.
+        assert 0 <= self.m <= self.k <= RING_BITS, (self.k, self.m)
 
     @property
     def width(self) -> int:
@@ -32,7 +34,7 @@ class HBLayer:
     @property
     def is_identity(self) -> bool:
         """Zero assigned bits degenerates ReLU to identity (ReLU culling)."""
-        return False
+        return self.k == self.m
 
 
 @dataclasses.dataclass(frozen=True)

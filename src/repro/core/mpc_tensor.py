@@ -136,7 +136,11 @@ class MPCTensor:
              triples: Optional[beaver.ReluTriples] = None,
              cone: bool = False) -> "MPCTensor":
         """GMW ReLU; `hb` selects the HummingBird reduced ring (k, m);
-        cone=True uses the MSB-cone-pruned adder (beyond-paper)."""
+        cone=True uses the MSB-cone-pruned adder (beyond-paper).  A width-0
+        `hb` (k == m) is the paper's culling mode: ReLU degrades to the
+        identity at zero communication."""
+        if hb.is_identity:
+            return self
         comm = comm or comm_lib.SimComm()
         n = int(np.prod(self.shape))
         flat = self.data.reshape((self.data.shape[0], n))
@@ -148,3 +152,55 @@ class MPCTensor:
         out = gmw.relu(key, flat, triples, comm, k=hb.k, m=hb.m, cone=cone)
         out = out.reshape((self.data.shape[0],) + tuple(self.shape))
         return MPCTensor(out, self.frac_bits)
+
+
+def relu_many(keys, tensors: Sequence["MPCTensor"], comm=None,
+              hbs: Optional[Sequence[HBLayer]] = None,
+              triples_list: Optional[Sequence] = None,
+              cone: bool = False) -> list:
+    """Round-shared GMW ReLU over sibling MPCTensors.
+
+    All tensors advance through the protocol in lockstep; each round's
+    payloads are coalesced into ONE exchange (comm.CoalescingComm), so the
+    layer pays max-over-groups rounds instead of the per-tensor sum, with
+    unchanged total bytes.  `keys[i]` is consumed exactly like
+    ``tensors[i].relu(keys[i], ...)`` would, so outputs are bit-identical
+    to per-tensor evaluation.  Identity (width-0) layers pass through.
+    """
+    comm = comm or comm_lib.SimComm()
+    n_t = len(tensors)
+    hbs = list(hbs) if hbs is not None else [HBLayer()] * n_t
+    triples_list = (list(triples_list) if triples_list is not None
+                    else [None] * n_t)
+    keys = list(keys)
+    if not (len(keys) == n_t == len(hbs) == len(triples_list)):
+        raise ValueError(
+            f"relu_many: mismatched lengths keys={len(keys)} "
+            f"tensors={n_t} hbs={len(hbs)} triples={len(triples_list)}")
+    out: list = [None] * n_t
+    flats, run_keys, tris, kms, order = [], [], [], [], []
+    for i, (t, hb, key, tri) in enumerate(zip(tensors, hbs, keys,
+                                              triples_list)):
+        if hb.is_identity:
+            out[i] = t
+            continue
+        n = int(np.prod(t.shape))
+        if tri is None:
+            kt, key = jax.random.split(key)
+            tri = beaver.gen_relu_triples(kt, n, hb.width,
+                                          n_parties=t.data.shape[0],
+                                          cone=cone)
+        flats.append(t.data.reshape((t.data.shape[0], n)))
+        run_keys.append(key)
+        tris.append(tri)
+        kms.append((hb.k, hb.m))
+        order.append(i)
+    rets = gmw.relu_many(run_keys, flats, tris, comm, kms, cone=cone)
+    for j, i in enumerate(order):
+        t = tensors[i]
+        data = rets[j].reshape((t.data.shape[0],) + tuple(t.shape))
+        out[i] = MPCTensor(data, t.frac_bits)
+    return out
+
+
+MPCTensor.relu_many = staticmethod(relu_many)

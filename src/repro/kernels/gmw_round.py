@@ -1,17 +1,30 @@
-"""Pallas TPU kernel: fused GMW Beaver-AND evaluation on packed words.
+"""Pallas TPU kernels: fused GMW round-local compute on packed words.
 
-After the (d, e) opening exchange, each party locally evaluates
-    z = c ^ (d & b) ^ (e & a) ^ (sel & d & e)
-over the packed bit-sliced planes (sel = all-ones on party 0).  Unfused,
-this chain is 6 elementwise HBM round-trips; the kernel evaluates it in one
-VMEM pass — the op is purely memory-bound, so fusion is the entire win
-(napkin: 6x HBM traffic -> 1x, bounded by 819 GB/s on v5e).
+Three fusion levels, all purely memory-bound (XOR/AND on uint32 planes),
+so folding the op chain into one VMEM pass is the entire win (napkin:
+6x HBM traffic -> 1x, bounded by 819 GB/s on v5e):
 
-Also provides the fused Kogge-Stone level update
-    g' = g ^ z_g ;  p' = z_p
-folded into the same pass when the AND outputs feed a carry level.
+1. ``beaver_and_pallas`` — post-opening Beaver evaluation
+       z = c ^ (d & b) ^ (e & a) ^ (sel & d & e)
+   (sel = all-ones on party 0).
+
+2. ``ks_mask_pallas`` — the *pre-exchange* half of one Kogge-Stone adder
+   level: plane-shift of (g, p) by the level distance, lhs/rhs assembly
+   ([p, p] and [g>>d, p>>d]) and Beaver triple masking (^a, ^b), one pass.
+   Seed path: 2 shifts + 2 concats + 2 XORs = 6 HBM round-trips.
+
+3. ``ks_combine_pallas`` — the *post-exchange* half: opening XOR with the
+   peer's (d, e), Beaver evaluation, and the level combine
+       g' = g ^ z[:w] ;  p' = z[w:]
+   in one pass (seed path: 2 XORs + beaver chain + XOR + 2 slices).
+
+Both ks kernels keep the full plane dimension in a single block (planes
+<= 2w <= 128) and grid over (party, word-blocks), so the static plane
+shift never crosses a block boundary.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +32,7 @@ from jax.experimental import pallas as pl
 
 _U32 = jnp.uint32
 BLOCK = (8, 256)  # (plane, word) VMEM tile; word dim multiple of 128 lanes
+BLOCK_WORDS = 256  # word-dim tile of the full-plane ks kernels
 
 
 def _beaver_and_kernel(d_ref, e_ref, a_ref, b_ref, c_ref, sel_ref, out_ref):
@@ -42,6 +56,74 @@ def beaver_and_pallas(d_open, e_open, a, b, c, sel, *, interpret: bool = True,
         out_specs=spec,
         interpret=interpret,
     )(d_open, e_open, a, b, c, sel)
+
+
+def _ks_mask_kernel(g_ref, p_ref, a_ref, b_ref, d_ref, e_ref, *, shift):
+    g = g_ref[0]                      # (w, bw)
+    p = p_ref[0]
+    zero = jnp.zeros((shift,) + g.shape[1:], g.dtype)
+    g_sh = jnp.concatenate([zero, g[:-shift]], axis=0)
+    p_sh = jnp.concatenate([zero, p[:-shift]], axis=0)
+    lhs = jnp.concatenate([p, p], axis=0)       # (2w, bw)
+    rhs = jnp.concatenate([g_sh, p_sh], axis=0)
+    d_ref[0] = lhs ^ a_ref[0]
+    e_ref[0] = rhs ^ b_ref[0]
+
+
+def ks_mask_pallas(g, p, a, b, shift: int, *, interpret: bool = True,
+                   block_words: int = BLOCK_WORDS):
+    """Fused pre-exchange Kogge-Stone level pass.
+
+    g, p: (P, w, W); a, b: (P, 2w, W) triple shares; static level shift.
+    Returns (d, e), each (P, 2w, W):
+        d = [p, p] ^ a ;  e = [g >> shift, p >> shift] ^ b
+    """
+    n_p, w, words = g.shape
+    grid = (n_p, words // block_words)
+    spec_w = pl.BlockSpec((1, w, block_words), lambda i, j: (i, 0, j))
+    spec_2w = pl.BlockSpec((1, 2 * w, block_words), lambda i, j: (i, 0, j))
+    return pl.pallas_call(
+        functools.partial(_ks_mask_kernel, shift=shift),
+        out_shape=(jax.ShapeDtypeStruct((n_p, 2 * w, words), _U32),
+                   jax.ShapeDtypeStruct((n_p, 2 * w, words), _U32)),
+        grid=grid,
+        in_specs=[spec_w, spec_w, spec_2w, spec_2w],
+        out_specs=(spec_2w, spec_2w),
+        interpret=interpret,
+    )(g, p, a, b)
+
+
+def _ks_combine_kernel(d_ref, do_ref, e_ref, eo_ref, a_ref, b_ref, c_ref,
+                       sel_ref, g_ref, g_out, p_out, *, w):
+    d = d_ref[0] ^ do_ref[0]          # opened d          (2w, bw)
+    e = e_ref[0] ^ eo_ref[0]          # opened e
+    z = c_ref[0] ^ (d & b_ref[0]) ^ (e & a_ref[0]) ^ (sel_ref[0] & d & e)
+    g_out[0] = g_ref[0] ^ z[:w]
+    p_out[0] = z[w:]
+
+
+def ks_combine_pallas(d, d_other, e, e_other, a, b, c, sel, g, *,
+                      interpret: bool = True,
+                      block_words: int = BLOCK_WORDS):
+    """Fused post-exchange Kogge-Stone level pass.
+
+    d/e are the local masked halves, d_other/e_other the peer's; a/b/c/sel
+    (P, 2w, W) Beaver shares; g (P, w, W) the running generate plane.
+    Returns (g', p') = (g ^ z[:, :w], z[:, w:]) with z the Beaver-AND.
+    """
+    n_p, w, words = g.shape
+    grid = (n_p, words // block_words)
+    spec_w = pl.BlockSpec((1, w, block_words), lambda i, j: (i, 0, j))
+    spec_2w = pl.BlockSpec((1, 2 * w, block_words), lambda i, j: (i, 0, j))
+    return pl.pallas_call(
+        functools.partial(_ks_combine_kernel, w=w),
+        out_shape=(jax.ShapeDtypeStruct((n_p, w, words), _U32),
+                   jax.ShapeDtypeStruct((n_p, w, words), _U32)),
+        grid=grid,
+        in_specs=[spec_2w] * 8 + [spec_w],
+        out_specs=(spec_w, spec_w),
+        interpret=interpret,
+    )(d, d_other, e, e_other, a, b, c, sel, g)
 
 
 def _ks_level_kernel(g_ref, zg_ref, zp_ref, g_out, p_out):

@@ -80,6 +80,36 @@ def beaver_and(d_open, e_open, a, b, c, sel):
     return ref.beaver_and(d_open, e_open, a, b, c, sel)
 
 
+@functools.partial(jax.jit, static_argnums=(4,))
+def ks_mask(g, p, a, b, shift: int):
+    """Fused pre-exchange Kogge-Stone level: plane-shift + lhs/rhs assembly
+    + Beaver triple masking in one pass.  Returns the (d, e) wire halves."""
+    if _use_pallas():
+        words = g.shape[-1]
+        bw = min(_gmw_round.BLOCK_WORDS, words + (-words) % 128)
+        args = [_pad_to(x, 2, bw) for x in (g, p, a, b)]
+        d, e = _gmw_round.ks_mask_pallas(*args, shift, interpret=_interpret(),
+                                         block_words=bw)
+        return d[..., :words], e[..., :words]
+    return ref.ks_mask(g, p, a, b, shift)
+
+
+@jax.jit
+def ks_combine(d, d_other, e, e_other, a, b, c, sel, g):
+    """Fused post-exchange Kogge-Stone level: opening XOR + Beaver local
+    evaluation + g/p level combine in one pass.  Returns (g', p')."""
+    if _use_pallas():
+        words = g.shape[-1]
+        bw = min(_gmw_round.BLOCK_WORDS, words + (-words) % 128)
+        sel_b = jnp.broadcast_to(sel, d.shape)
+        args = [_pad_to(x, 2, bw)
+                for x in (d, d_other, e, e_other, a, b, c, sel_b, g)]
+        g2, p2 = _gmw_round.ks_combine_pallas(*args, interpret=_interpret(),
+                                              block_words=bw)
+        return g2[..., :words], p2[..., :words]
+    return ref.ks_combine(d, d_other, e, e_other, a, b, c, sel, g)
+
+
 @functools.partial(jax.jit, static_argnums=())
 def ring_matmul(x: ring.Ring64, w_i32: jax.Array) -> ring.Ring64:
     """Ring64 [M, K] @ public int32 [K, N] -> Ring64 [M, N] (mod 2^64)."""

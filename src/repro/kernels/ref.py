@@ -39,6 +39,30 @@ def ks_level(g, z_g, z_p):
     return g ^ z_g, z_p
 
 
+def _shift_planes(x: jax.Array, d: int) -> jax.Array:
+    if d == 0:
+        return x
+    pad = jnp.zeros(x.shape[:-2] + (d,) + x.shape[-1:], x.dtype)
+    return jnp.concatenate([pad, x[..., :-d, :]], axis=-2)
+
+
+def ks_mask(g, p, a, b, shift: int):
+    """Oracle for the fused pre-exchange KS level pass (see gmw_round)."""
+    lhs = jnp.concatenate([p, p], axis=-2)
+    rhs = jnp.concatenate([_shift_planes(g, shift), _shift_planes(p, shift)],
+                          axis=-2)
+    return lhs ^ a, rhs ^ b
+
+
+def ks_combine(d, d_other, e, e_other, a, b, c, sel, g):
+    """Oracle for the fused post-exchange KS level pass (see gmw_round)."""
+    d_open = d ^ d_other
+    e_open = e ^ e_other
+    z = beaver_and(d_open, e_open, a, b, c, sel)
+    w = g.shape[-2]
+    return g ^ z[..., :w, :], z[..., w:, :]
+
+
 def ring_matmul(dx: jax.Array, dw: jax.Array):
     """Digit-plane matmul oracle; same contraction as the kernel.
 

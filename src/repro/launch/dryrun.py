@@ -35,7 +35,7 @@ from repro.launch import serve as serve_lib, specs as specs_lib
 from repro.launch import train as train_lib
 from repro.launch.mesh import make_mpc_mesh, make_production_mesh
 from repro.models import encdec, lm
-from repro.runtime.hlo_analyzer import analyze
+from repro.runtime.hlo_analyzer import analyze, normalize_cost_analysis
 from repro.runtime.roofline import roofline_terms
 from repro.train import optimizer as opt_lib
 
@@ -72,7 +72,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
-        ca = compiled.cost_analysis() or {}
+        ca = normalize_cost_analysis(compiled.cost_analysis())
         ma = compiled.memory_analysis()
         hlo = analyze(compiled.as_text())
     n_chips = 512 if multi_pod else 256

@@ -11,7 +11,7 @@ each group takes one HummingBird (k, m) assignment.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -170,12 +170,58 @@ def relu_plan(params, cfg: ResNetConfig, batch: int, hw: int = 0):
 
 def gen_mpc_triples(key, plan, hb: Optional[HBConfig], cfg: ResNetConfig,
                     cone: bool = False):
-    """Offline TTP phase: one ReluTriples bundle per ReLU call."""
+    """Offline TTP phase: one ReluTriples bundle per ReLU call (None for
+    culled width-0 groups, which consume no triples)."""
     hb_layers = (hb.layers if hb is not None
                  else tuple(HBLayer() for _ in range(n_relu_groups(cfg))))
     keys = jax.random.split(key, len(plan))
-    return [beaver.gen_relu_triples(k, n, hb_layers[g].width, cone=cone)
+    return [None if hb_layers[g].is_identity
+            else beaver.gen_relu_triples(k, n, hb_layers[g].width, cone=cone)
             for k, (n, g) in zip(keys, plan)]
+
+
+def _mpc_forward(params, hs: List[MPCTensor], cfg: ResNetConfig, relu_fn,
+                 comm) -> List[MPCTensor]:
+    """Shared MPC forward over sibling streams.
+
+    ``relu_fn(tensors, group) -> tensors`` is invoked once per ReLU point
+    with the sibling tensors of every stream, so implementations can share
+    protocol rounds across streams (see mpc_apply_many)."""
+    w, b = fold_bn(params["stem"], params["bn_stem"])
+    hs = [h.conv2d_public(w, 1, 1).add_public(b[:, None, None], comm)
+          for h in hs]
+    hs = relu_fn(hs, 0)
+    for si, stage in enumerate(params["stages"]):
+        for block in stage:
+            stride = 2 if ("proj" in block and si > 0) else 1
+            if "conv3" in block:
+                w1, b1 = fold_bn(block["conv1"], block["bn1"])
+                ys = relu_fn([h.conv2d_public(w1, 1, 0)
+                              .add_public(b1[:, None, None], comm)
+                              for h in hs], si + 1)
+                w2, b2 = fold_bn(block["conv2"], block["bn2"])
+                ys = relu_fn([y.conv2d_public(w2, stride, 1)
+                              .add_public(b2[:, None, None], comm)
+                              for y in ys], si + 1)
+                w3, b3 = fold_bn(block["conv3"], block["bn3"])
+                ys = [y.conv2d_public(w3, 1, 0)
+                      .add_public(b3[:, None, None], comm) for y in ys]
+            else:
+                w1, b1 = fold_bn(block["conv1"], block["bn1"])
+                ys = relu_fn([h.conv2d_public(w1, stride, 1)
+                              .add_public(b1[:, None, None], comm)
+                              for h in hs], si + 1)
+                w2, b2 = fold_bn(block["conv2"], block["bn2"])
+                ys = [y.conv2d_public(w2, 1, 1)
+                      .add_public(b2[:, None, None], comm) for y in ys]
+            if "proj" in block:
+                wp, bp = fold_bn(block["proj"], block["bn_proj"])
+                hs = [h.conv2d_public(wp, stride, 0)
+                      .add_public(bp[:, None, None], comm) for h in hs]
+            hs = relu_fn([h + y for h, y in zip(hs, ys)], si + 1)
+    hs = [h.global_avg_pool() for h in hs]
+    return [h.matmul_public(params["fc"]["w"])
+            .add_public(params["fc"]["b"], comm) for h in hs]
 
 
 def mpc_apply(params, x: MPCTensor, cfg: ResNetConfig, key,
@@ -191,32 +237,44 @@ def mpc_apply(params, x: MPCTensor, cfg: ResNetConfig, key,
     key_iter = iter(jax.random.split(key, 256))
     triple_iter = iter(triples) if triples is not None else None
 
-    def _relu(t: MPCTensor, g: int) -> MPCTensor:
+    def _relu(ts: List[MPCTensor], g: int) -> List[MPCTensor]:
         tri = next(triple_iter) if triple_iter is not None else None
-        return t.relu(next(key_iter), comm=comm, hb=hb_layers[g], triples=tri,
-                      cone=cone)
+        return [ts[0].relu(next(key_iter), comm=comm, hb=hb_layers[g],
+                           triples=tri, cone=cone)]
 
-    w, b = fold_bn(params["stem"], params["bn_stem"])
-    h = x.conv2d_public(w, 1, 1).add_public(b[:, None, None], comm)
-    h = _relu(h, 0)
-    for si, stage in enumerate(params["stages"]):
-        for block in stage:
-            stride = 2 if ("proj" in block and si > 0) else 1
-            if "conv3" in block:
-                w1, b1 = fold_bn(block["conv1"], block["bn1"])
-                y = _relu(h.conv2d_public(w1, 1, 0).add_public(b1[:, None, None], comm), si + 1)
-                w2, b2 = fold_bn(block["conv2"], block["bn2"])
-                y = _relu(y.conv2d_public(w2, stride, 1).add_public(b2[:, None, None], comm), si + 1)
-                w3, b3 = fold_bn(block["conv3"], block["bn3"])
-                y = y.conv2d_public(w3, 1, 0).add_public(b3[:, None, None], comm)
-            else:
-                w1, b1 = fold_bn(block["conv1"], block["bn1"])
-                y = _relu(h.conv2d_public(w1, stride, 1).add_public(b1[:, None, None], comm), si + 1)
-                w2, b2 = fold_bn(block["conv2"], block["bn2"])
-                y = y.conv2d_public(w2, 1, 1).add_public(b2[:, None, None], comm)
-            if "proj" in block:
-                wp, bp = fold_bn(block["proj"], block["bn_proj"])
-                h = h.conv2d_public(wp, stride, 0).add_public(bp[:, None, None], comm)
-            h = _relu(h + y, si + 1)
-    h = h.global_avg_pool()
-    return h.matmul_public(params["fc"]["w"]).add_public(params["fc"]["b"], comm)
+    return _mpc_forward(params, [x], cfg, _relu, comm)[0]
+
+
+def mpc_apply_many(params, xs: Sequence[MPCTensor], cfg: ResNetConfig, key,
+                   hb: Optional[HBConfig] = None, comm=None,
+                   triples: Optional[list] = None,
+                   cone: bool = False) -> List[MPCTensor]:
+    """Round-fused serving: N sibling inference streams share ReLU rounds.
+
+    Streams run the same weights but may differ in batch size or spatial
+    resolution; at every ReLU point the sibling tensors are evaluated by
+    ``nn.common.mpc_relu_many``, so the layer pays max-over-streams
+    protocol rounds (one coalesced exchange per round) instead of the
+    per-stream sum — the round-latency term of the serving cost drops by
+    ~len(xs) while total bytes stay unchanged.
+
+    ``triples`` keeps the offline TTP split: one entry per ReLU call (in
+    call order, as produced by ``relu_plan``/``gen_mpc_triples`` for each
+    stream), each a sequence with one ReluTriples bundle (or None for
+    culled groups) per stream."""
+    from repro.nn import common as nn_common
+
+    comm = comm or comm_lib.SimComm()
+    hb_layers = (hb.layers if hb is not None
+                 else tuple(HBLayer() for _ in range(n_relu_groups(cfg))))
+    key_iter = iter(jax.random.split(key, 256 * max(1, len(xs))))
+    triple_iter = iter(triples) if triples is not None else None
+
+    def _relu(ts: List[MPCTensor], g: int) -> List[MPCTensor]:
+        tris = next(triple_iter) if triple_iter is not None else None
+        keys = [next(key_iter) for _ in ts]
+        return nn_common.mpc_relu_many(keys, ts, hbs=[hb_layers[g]] * len(ts),
+                                       comm=comm, triples_list=tris,
+                                       cone=cone)
+
+    return _mpc_forward(params, list(xs), cfg, _relu, comm)

@@ -121,3 +121,23 @@ def mlp(params, x, act_name: str = "gelu"):
     h = constraints.shard(h, "dp", None, "tp")
     y = jnp.einsum("...f,fd->...d", h, params["w_down"])
     return constraints.shard(y, "dp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# MPC bridge: round-shared ReLU over sibling secret-shared tensors
+# ---------------------------------------------------------------------------
+
+def mpc_relu_many(keys, tensors, hbs=None, comm=None, triples_list=None,
+                  cone: bool = False):
+    """Apply GMW ReLU to sibling MPCTensors with shared protocol rounds.
+
+    The single import point models use for round-fused private inference:
+    every communication round across the sibling group becomes one
+    coalesced exchange (see core.mpc_tensor.relu_many / core.comm
+    CoalescingComm), so N parallel branches pay max-of-N rounds, not the
+    sum.  `keys` is one PRNG key per tensor; `hbs` one HummingBird
+    (k, m) spec per tensor (defaults to the exact 64-bit ring).
+    """
+    from repro.core import mpc_tensor  # lazy: keep the plaintext substrate light
+    return mpc_tensor.relu_many(keys, tensors, comm=comm, hbs=hbs,
+                                triples_list=triples_list, cone=cone)

@@ -256,3 +256,18 @@ class HloAnalysis:
 
 def analyze(hlo_text: str) -> Metrics:
     return HloAnalysis(hlo_text).metrics()
+
+
+def normalize_cost_analysis(ca) -> Dict[str, float]:
+    """Compat shim for ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returned a dict (or a one-element list of per-program dicts);
+    newer JAX returns a list.  Consumers index by key ("flops",
+    "bytes accessed"), so normalize everything to a single flat dict; an
+    empty/None analysis becomes {}.
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)

@@ -1,0 +1,115 @@
+"""Round/byte accounting: CountingComm + CoalescingComm counters vs the
+closed-form cost model, and the fused engine's swap reduction vs the seed
+per-call path (core/gmw_ref.py)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (beaver, comm as comm_lib, costmodel, fixed, gmw,
+                        gmw_ref, ring, shares)
+from repro.core.hummingbird import HBLayer
+
+
+def _shared(E, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-3.5, 3.5, E).astype(np.float32)
+    return shares.share(jax.random.PRNGKey(seed), fixed.encode_np(x))
+
+
+@pytest.mark.parametrize("k,m", [(64, 0), (21, 13), (8, 0), (20, 14), (2, 1)])
+def test_relu_rounds_and_bytes_match_model(k, m):
+    E, w = 96, k - m
+    X = _shared(E, seed=k)
+    tr = beaver.gen_relu_triples(jax.random.PRNGKey(1), E, w)
+    cm = comm_lib.CountingComm()
+    gmw.relu(jax.random.PRNGKey(2), X, tr, cm, k=k, m=m)
+    model = costmodel.relu_cost(E, w)
+    assert cm.n_swaps == model.rounds == gmw.n_rounds(w)
+    assert cm.bytes_tx == model.bytes_tx
+
+
+# (5, 3), (3, 0), (5, 0) cover widths whose MSB cone has an empty KS level
+# (the protocol skips it; the model must not charge a phantom round)
+@pytest.mark.parametrize("k,m", [(21, 13), (64, 0), (5, 3), (3, 0), (5, 0)])
+def test_cone_bytes_match_model(k, m):
+    E, w = 128, k - m
+    X = _shared(E, seed=k + 100)
+    tr = beaver.gen_relu_triples(jax.random.PRNGKey(3), E, w, cone=True)
+    cm = comm_lib.CountingComm()
+    gmw.relu(jax.random.PRNGKey(4), X, tr, cm, k=k, m=m, cone=True)
+    model = costmodel.relu_cost(E, w, cone=True)
+    assert cm.n_swaps == model.rounds
+    assert cm.bytes_tx == model.bytes_tx
+
+
+def test_coalescing_swap_passthrough_counts_rounds():
+    """CoalescingComm.swap (enqueue + flush) keeps seed round semantics."""
+    E, w = 64, 8
+    X = _shared(E, seed=7)
+    tr = beaver.gen_relu_triples(jax.random.PRNGKey(5), E, w)
+    inner = comm_lib.CountingComm()
+    cc = comm_lib.CoalescingComm(inner)
+    out_cc = gmw.relu(jax.random.PRNGKey(6), X, tr, cc, k=8, m=0)
+    out_sim = gmw.relu(jax.random.PRNGKey(6), X, tr, comm_lib.SimComm(),
+                       k=8, m=0)
+    np.testing.assert_array_equal(ring.to_uint64_np(out_cc),
+                                  ring.to_uint64_np(out_sim))
+    assert cc.n_rounds == inner.n_swaps == gmw.n_rounds(w)
+    assert cc.bytes_tx == costmodel.relu_cost(E, w).bytes_tx
+
+
+def test_fused_multigroup_halves_swaps_same_bytes():
+    """Acceptance: >=2x fewer swaps per multi-group ReLU layer, no byte
+    increase, outputs bit-identical to the seed per-call path."""
+    specs = [(96, 64, 0), (160, 21, 13), (64, 20, 14)]
+    keys = [jax.random.PRNGKey(40 + i) for i in range(len(specs))]
+    Xs = [_shared(E, seed=50 + i) for i, (E, _, _) in enumerate(specs)]
+    trs = [beaver.gen_relu_triples(jax.random.PRNGKey(60 + i), E, k - m)
+           for i, (E, k, m) in enumerate(specs)]
+
+    # seed path: one swap per round per group, serially
+    seed_cm = comm_lib.CountingComm()
+    seed_outs = [gmw_ref.relu(keys[i], Xs[i], trs[i], seed_cm, k=k, m=m)
+                 for i, (E, k, m) in enumerate(specs)]
+
+    # fused path: all groups in lockstep, one coalesced exchange per round
+    cc = comm_lib.CoalescingComm(comm_lib.SimComm())
+    fused_outs = gmw.relu_many(keys, Xs, trs, cc,
+                               [(k, m) for _, k, m in specs])
+
+    for a, b in zip(seed_outs, fused_outs):
+        np.testing.assert_array_equal(ring.to_uint64_np(a),
+                                      ring.to_uint64_np(b))
+    assert cc.n_rounds == max(gmw.n_rounds(k - m) for _, k, m in specs)
+    assert seed_cm.n_swaps >= 2 * cc.n_rounds          # >=2x fewer swaps
+    assert cc.bytes_tx == seed_cm.bytes_tx             # no byte increase
+    model = costmodel.relu_many_cost([(E, k - m) for E, k, m in specs])
+    assert cc.n_rounds == model.rounds
+    assert cc.bytes_tx == model.bytes_tx
+
+
+def test_identity_layer_costs_nothing():
+    """Width-0 (k == m) culled layers: zero rounds, zero bytes, identity."""
+    assert HBLayer(k=13, m=13).is_identity
+    assert gmw.n_rounds(0) == 0
+    assert costmodel.relu_cost(1024, 0).bytes_tx == 0
+    assert costmodel.relu_cost(1024, 0).rounds == 0
+    X = _shared(32, seed=9)
+    cm = comm_lib.CountingComm()
+    outs = gmw.relu_many([jax.random.PRNGKey(0)], [X], [None], cm,
+                         [(13, 13)])
+    np.testing.assert_array_equal(ring.to_uint64_np(outs[0]),
+                                  ring.to_uint64_np(X))
+    assert cm.n_swaps == 0
+
+
+def test_relu_many_cost_mixed_widths():
+    specs = [(100, 64), (200, 8), (50, 0)]
+    fused = costmodel.relu_many_cost(specs)
+    serial = costmodel.CommCost.zero()
+    for n, w in specs:
+        serial = serial + costmodel.relu_cost(n, w)
+    assert fused.bytes_tx == serial.bytes_tx
+    assert fused.rounds == max(costmodel.relu_cost(n, w).rounds
+                               for n, w in specs)
+    assert fused.rounds < serial.rounds

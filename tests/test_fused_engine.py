@@ -1,0 +1,165 @@
+"""Round-fused engine regression: bit-identity vs the frozen seed protocol
+(core/gmw_ref.py), relu_many vs per-tensor evaluation, ReLU culling, and
+the round-fused multi-stream ResNet forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RESNET_SMOKE
+from repro.core import (MPCTensor, beaver, comm as comm_lib, fixed, gmw,
+                        gmw_ref, mpc_tensor, ring, shares)
+from repro.core.hummingbird import HBConfig, HBLayer
+from repro.models import resnet
+
+CM = comm_lib.SimComm()
+
+
+def _shared(E, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-3.9, 3.9, E).astype(np.float32)
+    return shares.share(jax.random.PRNGKey(seed), fixed.encode_np(x))
+
+
+@pytest.mark.parametrize("k,m,cone", [
+    (64, 0, False),   # exact CrypTen baseline — the acceptance criterion
+    (64, 0, True),
+    (21, 13, False),
+    (21, 13, True),
+    (20, 14, False),
+    (2, 1, False),    # w=1: no adder rounds at all
+])
+def test_relu_bit_identical_to_seed_reference(k, m, cone):
+    """Same keys + triples => the fused engine's *shares* (not just the
+    reconstruction) equal the frozen seed implementation bit for bit."""
+    E = 128
+    X = _shared(E, seed=1000 + k * 64 + m)
+    tr = beaver.gen_relu_triples(jax.random.PRNGKey(11), E, k - m, cone=cone)
+    r_new = gmw.relu(jax.random.PRNGKey(12), X, tr, CM, k=k, m=m, cone=cone)
+    r_ref = gmw_ref.relu(jax.random.PRNGKey(12), X, tr, CM, k=k, m=m,
+                         cone=cone)
+    np.testing.assert_array_equal(ring.to_uint64_np(r_new),
+                                  ring.to_uint64_np(r_ref))
+
+
+def test_drelu_and_adder_bit_identical_to_seed():
+    E, w = 96, 8
+    X = _shared(E, seed=77)
+    tr = beaver.gen_relu_triples(jax.random.PRNGKey(13), E, w)
+    d_new = gmw.drelu(jax.random.PRNGKey(14), X, tr, CM, k=8, m=0)
+    d_ref = gmw_ref.drelu(jax.random.PRNGKey(14), X, tr, CM, k=8, m=0)
+    np.testing.assert_array_equal(ring.to_uint64_np(d_new),
+                                  ring.to_uint64_np(d_ref))
+
+
+def test_relu_many_matches_individual_tensors():
+    """relu_many consumes keys exactly like per-tensor .relu, so outputs
+    are bit-identical (shares included)."""
+    rng = np.random.default_rng(3)
+    shapes = [(24,), (4, 8), (2, 3, 5)]
+    hbs = [HBLayer(), HBLayer(k=21, m=13), HBLayer(k=20, m=14)]
+    tensors = [MPCTensor.from_plain(jax.random.PRNGKey(100 + i),
+                                    jnp.asarray(rng.uniform(-3, 3, s),
+                                                jnp.float32))
+               for i, s in enumerate(shapes)]
+    keys = [jax.random.PRNGKey(200 + i) for i in range(len(tensors))]
+    fused = mpc_tensor.relu_many(keys, tensors, hbs=hbs)
+    for t, key, hb, f in zip(tensors, keys, hbs, fused):
+        single = t.relu(key, hb=hb)
+        np.testing.assert_array_equal(ring.to_uint64_np(f.data),
+                                      ring.to_uint64_np(single.data))
+        # sanity: actually a ReLU
+        np.testing.assert_allclose(
+            f.reveal_np(), np.maximum(t.reveal_np(), 0), atol=2e-3)
+
+
+def test_relu_identity_culling():
+    """k == m degrades ReLU to the identity at zero communication."""
+    x = np.array([-1.5, -0.25, 0.5, 2.0], np.float32)
+    X = MPCTensor.from_plain(jax.random.PRNGKey(0), jnp.asarray(x))
+    cm = comm_lib.CountingComm()
+    out = X.relu(jax.random.PRNGKey(1), comm=cm, hb=HBLayer(k=13, m=13))
+    assert out is X
+    assert cm.n_swaps == 0
+    # mixed identity + live groups through relu_many
+    Y = MPCTensor.from_plain(jax.random.PRNGKey(2), jnp.asarray(x))
+    outs = mpc_tensor.relu_many(
+        [jax.random.PRNGKey(3), jax.random.PRNGKey(4)], [X, Y],
+        hbs=[HBLayer(k=13, m=13), HBLayer(k=21, m=13)], comm=cm)
+    assert outs[0] is X
+    np.testing.assert_allclose(outs[1].reveal_np(), np.maximum(x, 0),
+                               atol=2e-3)
+
+
+def test_mpc_apply_bit_identical_to_prerefactor_shape():
+    """mpc_apply (now routed through _mpc_forward) still matches the
+    plaintext model — guards the list-of-streams refactor."""
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 3, 8, 8)) * 0.5
+    ref_logits = resnet.apply(params, x, RESNET_SMOKE)
+    X = MPCTensor.from_plain(jax.random.PRNGKey(2), x)
+    out = resnet.mpc_apply(params, X, RESNET_SMOKE, jax.random.PRNGKey(3))
+    np.testing.assert_allclose(out.reveal_np(), np.asarray(ref_logits),
+                               atol=2e-2)
+
+
+def test_mpc_apply_many_round_fused_streams():
+    """Two sibling streams share ReLU rounds and both match plaintext."""
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+    xs = [jax.random.normal(jax.random.PRNGKey(10 + i), (1, 3, 8, 8)) * 0.5
+          for i in range(2)]
+    Xs = [MPCTensor.from_plain(jax.random.PRNGKey(20 + i), x)
+          for i, x in enumerate(xs)]
+    cm = comm_lib.CountingComm()
+    outs = resnet.mpc_apply_many(params, Xs, RESNET_SMOKE,
+                                 jax.random.PRNGKey(5), comm=cm)
+    for x, out in zip(xs, outs):
+        ref_logits = resnet.apply(params, x, RESNET_SMOKE)
+        np.testing.assert_allclose(out.reveal_np(), np.asarray(ref_logits),
+                                   atol=2e-2)
+    # fused: rounds independent of stream count (one coalesced exchange
+    # per protocol round), so swaps == the single-stream count
+    single_cm = comm_lib.CountingComm()
+    resnet.mpc_apply(params, Xs[0], RESNET_SMOKE, jax.random.PRNGKey(5),
+                     comm=single_cm)
+    assert cm.n_swaps == single_cm.n_swaps
+
+
+def test_mpc_apply_many_with_offline_triples():
+    """Round-fused serving keeps the offline TTP split: pregenerated
+    triples are consumed per ReLU call, one bundle per stream."""
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+    xs = [jax.random.normal(jax.random.PRNGKey(30 + i), (1, 3, 8, 8)) * 0.5
+          for i in range(2)]
+    Xs = [MPCTensor.from_plain(jax.random.PRNGKey(40 + i), x)
+          for i, x in enumerate(xs)]
+    plan = resnet.relu_plan(params, RESNET_SMOKE, batch=1, hw=8)
+    per_stream = [resnet.gen_mpc_triples(jax.random.PRNGKey(50 + i), plan,
+                                         None, RESNET_SMOKE)
+                  for i in range(2)]
+    triples = [list(call) for call in zip(*per_stream)]  # per call, per stream
+    outs = resnet.mpc_apply_many(params, Xs, RESNET_SMOKE,
+                                 jax.random.PRNGKey(6), triples=triples)
+    for x, out in zip(xs, outs):
+        ref_logits = resnet.apply(params, x, RESNET_SMOKE)
+        np.testing.assert_allclose(out.reveal_np(), np.asarray(ref_logits),
+                                   atol=2e-2)
+
+
+def test_culled_triples_plan():
+    """gen_mpc_triples emits None for culled groups and mpc_apply runs."""
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+    n_groups = resnet.n_relu_groups(RESNET_SMOKE)
+    layers = [HBLayer(k=21, m=13) for _ in range(n_groups)]
+    layers[-1] = HBLayer(k=13, m=13)          # cull the last group
+    counts = resnet.relu_group_elements(params, RESNET_SMOKE)
+    hb = HBConfig(tuple(layers), tuple(counts))
+    plan = resnet.relu_plan(params, RESNET_SMOKE, batch=1, hw=8)
+    triples = resnet.gen_mpc_triples(jax.random.PRNGKey(1), plan, hb,
+                                     RESNET_SMOKE)
+    assert any(t is None for t in triples)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 3, 8, 8)) * 0.5
+    X = MPCTensor.from_plain(jax.random.PRNGKey(3), x)
+    out = resnet.mpc_apply(params, X, RESNET_SMOKE, jax.random.PRNGKey(4),
+                           hb=hb, triples=triples)
+    assert out.shape == (1, RESNET_SMOKE.n_classes)

@@ -114,8 +114,9 @@ def test_cone_pruned_adder_bit_identical(w, k, m, rng):
     full_c = costmodel.relu_cost(E, w).breakdown["circuit"]
     cone_c = costmodel.relu_cost(E, w, cone=True).breakdown["circuit"]
     assert cone_c < full_c / 2  # at least 2x fewer circuit bytes
-    # same round count: cone prunes gates, not levels
-    assert costmodel.relu_cost(E, w, cone=True).rounds == \
+    # cone never adds rounds; levels whose cone slice is empty (e.g. the
+    # top level for w=5) are skipped by the protocol and the model alike
+    assert costmodel.relu_cost(E, w, cone=True).rounds <= \
         costmodel.relu_cost(E, w).rounds
 
 

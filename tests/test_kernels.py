@@ -33,6 +33,37 @@ def test_gmw_round_sweep(planes, words, rng):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("w,shift", [(8, 1), (8, 4), (64, 32), (6, 2)])
+def test_ks_mask_fused_level(w, shift, rng):
+    """Fused plane-shift + triple-masking kernel vs the jnp oracle."""
+    words = 128
+    mk = lambda planes: jnp.asarray(rng.integers(
+        0, 2**32, (2, planes, words), dtype=np.uint64).astype(np.uint32))
+    g, p = mk(w), mk(w)
+    a, b = mk(2 * w), mk(2 * w)
+    d_k, e_k = gmw_round.ks_mask_pallas(g, p, a, b, shift, interpret=True,
+                                        block_words=words)
+    d_r, e_r = ref.ks_mask(g, p, a, b, shift)
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    np.testing.assert_array_equal(np.asarray(e_k), np.asarray(e_r))
+
+
+@pytest.mark.parametrize("w", [8, 64])
+def test_ks_combine_fused_level(w, rng):
+    """Fused open + Beaver eval + g/p combine kernel vs the jnp oracle."""
+    words = 128
+    mk = lambda planes: jnp.asarray(rng.integers(
+        0, 2**32, (2, planes, words), dtype=np.uint64).astype(np.uint32))
+    d, do, e, eo, a, b, c = (mk(2 * w) for _ in range(7))
+    g = mk(w)
+    sel = jnp.broadcast_to(jnp.uint32(0xFFFFFFFF), d.shape)
+    g_k, p_k = gmw_round.ks_combine_pallas(d, do, e, eo, a, b, c, sel, g,
+                                           interpret=True, block_words=words)
+    g_r, p_r = ref.ks_combine(d, do, e, eo, a, b, c, sel, g)
+    np.testing.assert_array_equal(np.asarray(g_k), np.asarray(g_r))
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+
+
 def test_ks_level_fusion(rng):
     g = jnp.asarray(rng.integers(0, 2**32, (8, 256), dtype=np.uint64).astype(np.uint32))
     zg = g ^ jnp.uint32(123456)

@@ -3,6 +3,9 @@ GMW protocol (sim backend), via hypothesis."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import beaver, comm as comm_lib, fixed, gmw, shares
