@@ -4,12 +4,13 @@ import time
 
 import jax
 
+from repro import api
 from repro.configs.resnet import RESNET18
 from repro.core import costmodel
 from repro.core.hummingbird import HBConfig, HBLayer
 from repro.models import resnet
 
-LAN_BW, LAN_RTT = 10e9 / 8, 50e-6
+LAN_BW, LAN_RTT = api.LAN.bandwidth_bps, api.LAN.rtt_s
 BATCH = 512
 
 

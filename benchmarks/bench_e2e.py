@@ -10,16 +10,15 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs.resnet import RESNET18, RESNET50
 from repro.core import costmodel
 from repro.core.hummingbird import HBConfig, HBLayer
 from repro.models import resnet
 
-NETWORKS = {
-    "highbw": (16e12 / 8, 10e-6),   # 16 Tbps NVLink-class, 10us rtt
-    "lan": (10e9 / 8, 50e-6),       # 10 Gbps, 50us
-    "wan": (352e6 / 8, 20e-3),      # 352 Mbps, 20ms (paper's WAN)
-}
+# single source of truth for the paper's §5.2 network points: repro.api
+NETWORKS = {name: (p.bandwidth_bps, p.rtt_s)
+            for name, p in api.NETWORKS.items()}
 BATCH = 512
 
 

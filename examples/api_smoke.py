@@ -1,0 +1,57 @@
+"""Tiny repro.api end-to-end: trace -> plan -> session -> compile -> call
+-> serve_step, in seconds.  CI runs this (plus quickstart.py) so API
+regressions fail fast outside pytest.
+
+    PYTHONPATH=src python examples/api_smoke.py
+"""
+import jax
+import numpy as np
+
+from repro import api
+from repro.configs import RESNET_SMOKE
+from repro.core import beaver
+from repro.core.hummingbird import HBConfig, HBLayer
+from repro.models import resnet
+
+
+def main():
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 8, 8)) * 0.5
+
+    def afn(p, v, relu_fn=None):
+        return resnet.apply(p, v, RESNET_SMOKE, relu_fn=relu_fn)
+
+    # offline: trace a plan, assign (k, m) per group (last group culled)
+    plan = api.trace_plan(afn, params, x.shape, name="smoke")
+    hb = HBConfig(tuple([HBLayer(k=21, m=13)] * (plan.n_groups - 1)
+                        + [HBLayer(k=13, m=13)]),
+                  plan.group_elements)
+    plan = plan.with_hb(hb)
+    print(f"plan: {len(plan.calls)} ReLU calls, {plan.n_groups} groups, "
+          f"{plan.cost().bytes_tx} B/party, {plan.cost().rounds} rounds, "
+          f"LAN estimate {plan.estimate(network=api.LAN)*1e3:.2f} ms")
+
+    # JSON round-trip is exact
+    assert api.Plan.from_json(plan.to_json()) == plan
+
+    # online: compile and run private inference
+    model = api.compile(afn, params, RESNET_SMOKE, plan, api.Session(key=0))
+    X = model.encrypt(jax.random.PRNGKey(2), x)
+    out = model(X)
+    want = np.argmax(np.asarray(afn(params, x)), -1)
+    got = np.argmax(out.reveal_np(), -1)
+    assert (got == want).all(), (got, want)
+    print("private __call__ matches plaintext argmax:", got.tolist())
+
+    # serving: same replay as a step with an offline triple pool
+    pool = beaver.gen_plan_triples(jax.random.PRNGKey(3), plan.triple_specs())
+    step = model.serve_step()
+    lo, hi = step(params, X.data.lo, X.data.hi, pool, jax.random.PRNGKey(4))
+    from repro.core import ring, shares, fixed
+    served = fixed.decode_np(shares.reconstruct(ring.Ring64(lo, hi)))
+    assert (np.argmax(served, -1) == want).all()
+    print("serve_step (offline TriplePool) matches: OK")
+
+
+if __name__ == "__main__":
+    main()

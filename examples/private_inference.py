@@ -1,20 +1,26 @@
 """End-to-end driver (the paper's kind: serving): train a ResNet, run the
 HummingBird offline phase (search + finetune), then serve batched private
-inference requests through the real GMW protocol and report accuracy +
-communication vs the exact baseline.
+inference requests through the real GMW protocol via the Plan/Session/
+compile API and report accuracy + communication vs the exact baseline.
+
+The offline artifact is a first-class ``repro.api.Plan``: pass --plan-out
+to save the searched plan as JSON and --plan-in to reuse it in a later run
+(skipping the search).
 
     PYTHONPATH=src python examples/private_inference.py [--requests 16]
+    PYTHONPATH=src python examples/private_inference.py --plan-out plan.json
+    PYTHONPATH=src python examples/private_inference.py --plan-in plan.json
 """
 import argparse
+import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import RESNET_SMOKE
-from repro.core import MPCTensor, costmodel
-from repro.core.hummingbird import HBConfig
+from repro.core import costmodel
 from repro.data import ImagePipeline
 from repro.models import resnet
 from repro.search import finetune as ft, search_budget
@@ -25,6 +31,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--budget", type=float, default=8 / 64)
+    ap.add_argument("--plan-out", type=str, default=None,
+                    help="save the searched Plan (JSON) here")
+    ap.add_argument("--plan-in", type=str, default=None,
+                    help="reuse a saved Plan instead of searching")
     args = ap.parse_args()
 
     # --- setup: model + data -------------------------------------------------
@@ -35,33 +45,58 @@ def main():
     def afn(p, x, relu_fn=None):
         return resnet.apply(p, x, RESNET_SMOKE, relu_fn=relu_fn)
 
-    groups = resnet.relu_group_elements(params, RESNET_SMOKE)
     print("[1/4] training the plaintext model...")
-    params, _ = ft.finetune(afn, params, xs[:384], ys[:384],
-                            HBConfig.exact(groups), jax.random.PRNGKey(1),
-                            epochs=4, batch=64, lr=3e-3)
-    base_acc = evaluate_accuracy(afn, params, xs[384:], ys[384:],
-                                 HBConfig.exact(groups), jax.random.PRNGKey(2))
+    plan = api.trace_plan(afn, params,
+                          (args.requests, 3, RESNET_SMOKE.in_hw,
+                           RESNET_SMOKE.in_hw), name=RESNET_SMOKE.name)
+    params, _ = ft.finetune(afn, params, xs[:384], ys[:384], plan.hb,
+                            jax.random.PRNGKey(1), epochs=4, batch=64,
+                            lr=3e-3)
+    base_acc = evaluate_accuracy(afn, params, xs[384:], ys[384:], plan.hb,
+                                 jax.random.PRNGKey(2))
     print(f"      baseline accuracy: {base_acc:.3f}")
 
-    # --- offline phase: search + finetune ------------------------------------
-    print(f"[2/4] HummingBird-b search (budget {args.budget:.3f})...")
-    res = search_budget(afn, params, xs[384:448], ys[384:448], groups,
-                        jax.random.PRNGKey(3), budget=args.budget,
-                        bit_choices=(6, 8))
-    print(f"      found {[(l.k, l.m) for l in res.config.layers]} "
-          f"({res.config.budget_fraction():.3f} of bits, "
-          f"{res.search_time_s:.1f}s)")
-    params, _ = ft.finetune(afn, params, xs[:384], ys[:384], res.config,
+    # --- offline phase: search (or reload a saved plan) + finetune -----------
+    if args.plan_in:
+        loaded = api.Plan.load(args.plan_in)
+        if loaded.hb.n_groups != plan.hb.n_groups:
+            raise SystemExit(
+                f"--plan-in {args.plan_in}: saved plan has "
+                f"{loaded.hb.n_groups} ReLU groups but this model traces "
+                f"{plan.hb.n_groups} — it was searched for a different "
+                "model/config")
+        # adopt the saved (k, m) assignment (and adder mode) onto this
+        # run's fresh trace so cost accounting matches the request batch
+        plan = dataclasses.replace(
+            plan.with_hb(api.HBConfig(loaded.hb.layers,
+                                      plan.hb.group_elements)),
+            cone=loaded.cone)
+        print(f"[2/4] reusing saved plan {args.plan_in}: "
+              f"{[(l.k, l.m) for l in plan.hb.layers]} "
+              f"({plan.hb.budget_fraction():.3f} of bits)")
+    else:
+        print(f"[2/4] HummingBird-b search (budget {args.budget:.3f})...")
+        res = search_budget(afn, params, xs[384:448], ys[384:448], plan,
+                            jax.random.PRNGKey(3), budget=args.budget,
+                            bit_choices=(6, 8))
+        plan = res.plan
+        print(f"      found {[(l.k, l.m) for l in plan.hb.layers]} "
+              f"({plan.hb.budget_fraction():.3f} of bits, "
+              f"{res.search_time_s:.1f}s)")
+    if args.plan_out:
+        plan.save(args.plan_out)
+        print(f"      plan saved to {args.plan_out}")
+    params, _ = ft.finetune(afn, params, xs[:384], ys[:384], plan.hb,
                             jax.random.PRNGKey(4), epochs=1, batch=64)
 
-    # --- online phase: batched private inference ------------------------------
+    # --- online phase: batched private inference -----------------------------
     print(f"[3/4] serving {args.requests} private requests (real GMW)...")
     req_x, req_y = xs[448:448 + args.requests], ys[448:448 + args.requests]
+    session = api.Session(key=7)
+    model = api.compile(afn, params, RESNET_SMOKE, plan, session)
     t0 = time.time()
-    X = MPCTensor.from_plain(jax.random.PRNGKey(5), req_x)
-    out = resnet.mpc_apply(params, X, RESNET_SMOKE, jax.random.PRNGKey(6),
-                           hb=res.config)
+    X = model.encrypt(jax.random.PRNGKey(5), req_x)
+    out = model(X, key=jax.random.PRNGKey(6))
     pred = np.argmax(out.reveal_np(), -1)
     wall = time.time() - t0
     acc = float((pred == np.asarray(req_y)).mean())
@@ -70,12 +105,15 @@ def main():
 
     # --- report ----------------------------------------------------------------
     print("[4/4] results")
-    r = costmodel.reduction_factors(res.config)
+    r = costmodel.reduction_factors(plan.hb)
     print(f"      private-inference accuracy: {acc:.3f} "
           f"(plaintext agreement {agree:.3f})")
     print(f"      comm reduction vs CrypTen-64: {r['bytes_reduction']:.2f}x "
           f"bytes, {r['rounds_reduction']:.2f}x rounds, "
           f"{r['bits_discarded_frac']*100:.1f}% of DReLU bits discarded")
+    print(f"      plan estimate: {plan.cost().bytes_tx / 1e6:.1f} MB/party, "
+          f"LAN {plan.estimate(network=api.LAN)*1e3:.1f} ms, "
+          f"WAN {plan.estimate(network=api.WAN):.2f} s")
     print(f"      wall time (CPU sim, both parties): {wall:.1f}s")
 
 

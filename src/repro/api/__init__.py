@@ -1,0 +1,64 @@
+"""repro.api — one private-inference API over any model, comm backend,
+and triple source.
+
+Three objects organise HummingBird's offline/online contract (PAPER §4):
+
+- **Plan** (`plan.py`): a first-class, JSON-(de)serializable network plan —
+  the model's ReLU call trace, the per-group HummingBird (k, m)
+  assignment, triple requirements, and the analytic communication cost /
+  latency estimate.  Produced by ``trace_plan`` on any
+  ``apply(params, x, relu_fn=...)`` model; saved and reloaded with
+  ``plan.save(path)`` / ``Plan.load(path)``.
+- **Session** (`session.py`): owns the comm backend (SimComm /
+  CountingComm / mesh), the PRNG stream, and a ``beaver.TripleProvider``
+  (inline, streaming TTP, eager pool) — no call site threads
+  ``key``/``comm``/``triples`` by hand.
+- **compile** (`compile.py`): binds (model, Plan, Session) into a
+  ``PrivateModel`` whose ``__call__`` runs batched private inference with
+  ``relu_many`` round-sharing across sibling streams and whose
+  ``serve_step()`` lowers the same replay for the mesh backend.
+
+Usage::
+
+    import jax
+    from repro import api
+    from repro.configs import RESNET_SMOKE
+    from repro.models import resnet
+
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+
+    def afn(p, x, relu_fn=None):
+        return resnet.apply(p, x, RESNET_SMOKE, relu_fn=relu_fn)
+
+    # offline: trace the plan, pick/search an HB assignment, persist it
+    plan = api.trace_plan(afn, params, (4, 3, 16, 16), name="resnet-smoke")
+    plan.save("plan.json")                      # == Plan.load round-trip
+    print(plan.cost().bytes_tx, plan.estimate(network=api.WAN))
+
+    # online: one Session, one compile, then just call it
+    session = api.Session(key=0)
+    model = api.compile(afn, params, RESNET_SMOKE, plan, session)
+    X = model.encrypt(jax.random.PRNGKey(1),
+                      jax.random.normal(jax.random.PRNGKey(2), (4, 3, 16, 16)))
+    logits = model(X).reveal()
+
+    # mesh serving: the same replay as a jit-able step with offline triples
+    step = model.serve_step()
+
+New model families plug in by registering their secret-shared forward once
+with ``register_mpc_forward(ConfigType, forward)``; everything else
+(planning, triples, round sharing, serving) is shared machinery.
+"""
+from repro.core.hummingbird import HBConfig, HBLayer
+
+from .compile import (PrivateModel, compile, register_mpc_forward,
+                      resolve_mpc_forward)
+from .plan import (HIGHBW, LAN, NETWORKS, WAN, NetworkPreset, Plan, ReluCall,
+                   trace_plan)
+from .session import Session
+
+__all__ = [
+    "Plan", "ReluCall", "trace_plan", "Session", "compile", "PrivateModel",
+    "register_mpc_forward", "resolve_mpc_forward", "HBConfig", "HBLayer",
+    "NetworkPreset", "NETWORKS", "LAN", "WAN", "HIGHBW",
+]

@@ -1,0 +1,159 @@
+"""compile(): lower (model, Plan, Session) into a callable PrivateModel.
+
+The MPC forward of a model family is registered once
+(``register_mpc_forward``) as a function
+``forward(params, tensors, cfg, relu_fn, comm) -> tensors`` over sibling
+``MPCTensor`` streams; ``compile`` resolves it from the model config's type
+and returns a ``PrivateModel`` that replays the Plan: every ReLU call
+draws its keys from the Session's PRNG stream and its Beaver triples from
+the Session's ``TripleProvider``, and sibling streams share protocol
+rounds through ``relu_many`` (one coalesced exchange per round).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+import jax
+
+from repro.core import beaver, ring
+from repro.core.mpc_tensor import MPCTensor, relu_many
+from .plan import Plan
+from .session import Session
+
+_MPC_FORWARDS: Dict[type, Callable] = {}
+
+
+def register_mpc_forward(cfg_type: type, forward: Callable) -> None:
+    """Register the secret-shared forward for a model-config type.
+
+    ``forward(params, tensors, cfg, relu_fn, comm)`` must evaluate the
+    model on a list of sibling MPCTensor streams, calling
+    ``relu_fn(tensors, group)`` at every ReLU point (the Plan replay hooks
+    in there).
+    """
+    _MPC_FORWARDS[cfg_type] = forward
+
+
+def resolve_mpc_forward(cfg) -> Callable:
+    for klass in type(cfg).__mro__:
+        if klass in _MPC_FORWARDS:
+            return _MPC_FORWARDS[klass]
+    # model modules register on import; pull the zoo in once before failing
+    import repro.models  # noqa: F401
+    for klass in type(cfg).__mro__:
+        if klass in _MPC_FORWARDS:
+            return _MPC_FORWARDS[klass]
+    raise KeyError(
+        f"no MPC forward registered for {type(cfg).__name__}; call "
+        "repro.api.register_mpc_forward or pass mpc_forward= to compile")
+
+
+def compile(apply_fn, params, cfg, plan: Plan,
+            session: Optional[Session] = None, *,
+            mpc_forward: Optional[Callable] = None) -> "PrivateModel":
+    """Bind a model to a Plan and a Session for private inference.
+
+    ``apply_fn(params, x, relu_fn=...)`` is the plaintext forward (kept for
+    reference evaluation; may be None).  ``cfg`` is the model config whose
+    type resolves the registered MPC forward unless ``mpc_forward`` is
+    given explicitly.
+    """
+    if mpc_forward is None:
+        mpc_forward = resolve_mpc_forward(cfg)
+    return PrivateModel(apply_fn=apply_fn, params=params, cfg=cfg, plan=plan,
+                        session=session if session is not None else Session(),
+                        mpc_forward=mpc_forward)
+
+
+@dataclasses.dataclass
+class PrivateModel:
+    """A model compiled for private inference under a Plan + Session.
+
+    ``__call__`` accepts one MPCTensor or a sequence of sibling streams;
+    streams share protocol rounds via ``relu_many`` (max-over-streams
+    rounds per ReLU layer, one coalesced exchange per round).
+    ``serve_step()`` lowers the same replay into a jit-able
+    ``step(params, lo, hi, triples, key)`` for the mesh backend.
+    """
+
+    apply_fn: Optional[Callable]
+    params: object
+    cfg: object
+    plan: Plan
+    session: Session
+    mpc_forward: Callable
+
+    # -- convenience ----------------------------------------------------------
+    def encrypt(self, key, x_f) -> MPCTensor:
+        """Secret-share a plaintext input."""
+        return MPCTensor.from_plain(key, x_f)
+
+    def plaintext(self, x_f, params=None):
+        """Reference (non-private) forward, exact ReLU."""
+        assert self.apply_fn is not None, "compiled without apply_fn"
+        return self.apply_fn(params if params is not None else self.params, x_f)
+
+    def estimate(self, *args, **kwargs) -> float:
+        return self.plan.estimate(*args, **kwargs)
+
+    # -- online phase ---------------------------------------------------------
+    def __call__(self, xs: Union[MPCTensor, Sequence[MPCTensor]], *,
+                 key=None) -> Union[MPCTensor, List[MPCTensor]]:
+        single = isinstance(xs, MPCTensor)
+        tensors = [xs] if single else list(xs)
+        if key is None:
+            key = self.session.next_key()
+        outs = self._run(tensors, key, self.session.comm,
+                         self.session.provider, self.params)
+        return outs[0] if single else outs
+
+    def _run(self, tensors: List[MPCTensor], key, comm, provider, params):
+        """Replay the plan over sibling streams: one relu_many per ReLU
+        call, keys consumed per stream in call order (bit-identical to the
+        historical per-call `.relu` path for a single stream)."""
+        hb_layers = self.plan.hb.layers
+        cone = self.plan.cone
+        key_iter = iter(jax.random.split(key, 256 * max(1, len(tensors))))
+
+        def _relu(hs: List[MPCTensor], g: int) -> List[MPCTensor]:
+            hb = hb_layers[g]
+            keys = [next(key_iter) for _ in hs]
+            tris = [provider.relu_triples(math.prod(h.shape), hb.width,
+                                          cone=cone) for h in hs]
+            outs = list(hs)
+            # zero-element streams (empty batch) have nothing to compute
+            live = [i for i, h in enumerate(hs) if math.prod(h.shape)]
+            if live:
+                rets = relu_many([keys[i] for i in live],
+                                 [hs[i] for i in live],
+                                 comm=comm, hbs=[hb] * len(live),
+                                 triples_list=[tris[i] for i in live],
+                                 cone=cone)
+                for j, i in enumerate(live):
+                    outs[i] = rets[j]
+            return outs
+
+        return self.mpc_forward(params, tensors, self.cfg, _relu, comm)
+
+    # -- mesh serving ---------------------------------------------------------
+    def serve_step(self) -> Callable:
+        """step(params, lo, hi, triples, key) -> (lo, hi) logits shares.
+
+        ``lo``/``hi`` are the Ring64 limbs of the input shares, shape
+        (2, B, ...), party dim sharded over the mesh's party axis by the
+        caller's in_shardings; ``triples`` is the offline pool (one bundle
+        or None per ReLU call, see ``Plan.triple_specs``), entering as step
+        inputs so the TTP material is party-sharded too.  Protocol
+        exchanges run on the session's comm (``SimComm`` materialises the
+        party dim; XLA lowers each swap to a collective-permute).
+        """
+        def step(params, lo, hi, triples, key):
+            x = MPCTensor(ring.Ring64(lo, hi))
+            provider = (beaver.TriplePool(triples) if triples is not None
+                        else self.session.provider)
+            out = self._run([x], key, self.session.comm, provider, params)[0]
+            return out.data.lo, out.data.hi
+
+        return step

@@ -1,0 +1,208 @@
+"""Plan: the first-class offline artifact of HummingBird private inference.
+
+A Plan records what the online phase must replay exactly (PAPER §4): the
+model's ReLU call sites in call order (element count, group, shape), the
+per-group HummingBird (k, m) assignment, and whether the MSB-cone-pruned
+adder is used.  It is produced by ``trace_plan`` — a generic shape tracer
+that works on any ``apply(params, x, relu_fn=...)`` model — and is
+JSON-(de)serializable so the offline search artifact can be saved, shipped,
+and reloaded across runs (``plan.save`` / ``Plan.load``).
+
+From a Plan alone you get the analytic communication cost (``plan.cost()``,
+validated bit-exactly against ``CountingComm`` in the comm-counter tests)
+and a latency estimate under the paper's evaluation networks
+(``plan.estimate(network=WAN)``, §5.2 projection methodology).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel
+from repro.core.costmodel import CommCost
+from repro.core.hummingbird import HBConfig
+
+
+# ---------------------------------------------------------------------------
+# Network presets (paper §5.2 evaluation setup; same numbers as bench_e2e)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPreset:
+    name: str
+    bandwidth_bps: float          # one-direction link bandwidth, bits/s
+    rtt_s: float
+
+
+HIGHBW = NetworkPreset("highbw", 16e12 / 8, 10e-6)  # NVLink-class
+LAN = NetworkPreset("lan", 10e9 / 8, 50e-6)         # 10 Gbps, 50us
+WAN = NetworkPreset("wan", 352e6 / 8, 20e-3)        # 352 Mbps, 20ms (paper)
+NETWORKS = {p.name: p for p in (HIGHBW, LAN, WAN)}
+
+
+@dataclasses.dataclass(frozen=True)
+class ReluCall:
+    """One ReLU call site: how many elements, which (k, m) group, what
+    shape (without the party dimension)."""
+
+    n_elements: int
+    group: int
+    shape: Tuple[int, ...]
+
+    def to_json(self) -> Dict:
+        return {"n_elements": self.n_elements, "group": self.group,
+                "shape": list(self.shape)}
+
+    @staticmethod
+    def from_json(d: Dict) -> "ReluCall":
+        return ReluCall(int(d["n_elements"]), int(d["group"]),
+                        tuple(int(s) for s in d["shape"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Network plan: ReLU call trace + per-group HummingBird assignment.
+
+    ``calls`` is the model's ReLU trace in call order; ``hb`` carries one
+    ``HBLayer`` (k, m) per ReLU group plus group element counts for budget
+    accounting.  ``calls`` may be empty for plans built directly from an
+    ``HBConfig`` (``Plan.from_hb``) — execution only needs ``hb``/``cone``;
+    cost estimation and offline triple generation need the trace.
+    """
+
+    calls: Tuple[ReluCall, ...]
+    hb: HBConfig
+    input_shape: Tuple[int, ...] = ()
+    cone: bool = False
+    name: str = ""
+
+    # -- derived views --------------------------------------------------------
+    @property
+    def n_groups(self) -> int:
+        return self.hb.n_groups
+
+    @property
+    def group_elements(self) -> Tuple[int, ...]:
+        return self.hb.group_elements
+
+    def with_hb(self, hb: HBConfig) -> "Plan":
+        """Same trace, new (k, m) assignment (e.g. the search result)."""
+        assert hb.n_groups == self.hb.n_groups, (hb.n_groups, self.hb.n_groups)
+        return dataclasses.replace(self, hb=hb)
+
+    def triple_specs(self) -> Tuple[Tuple[int, int], ...]:
+        """(n_elements, width) per ReLU call — what the offline TTP must
+        generate for one request (see beaver.gen_plan_triples/EagerTTP)."""
+        return tuple((c.n_elements, self.hb.layers[c.group].width)
+                     for c in self.calls)
+
+    # -- analytics ------------------------------------------------------------
+    def cost(self, streams: int = 1) -> CommCost:
+        """Closed-form ReLU communication of one replay of this plan.
+
+        ``streams`` > 1 prices the round-fused serving mode: sibling
+        streams share every protocol round via ``relu_many`` (bytes scale
+        with the stream count, rounds are paid once per call).
+
+        Trace-free plans (``Plan.from_hb``) carry no call list, so their
+        cost is unknown — raise rather than report a free model.
+        """
+        if not self.calls and self.n_groups:
+            raise ValueError(
+                "cost/estimate need a traced plan: this plan was built "
+                "without a call list (Plan.from_hb) — use trace_plan / "
+                "model-specific trace() to get one")
+        total = CommCost.zero()
+        for c in self.calls:
+            w = self.hb.layers[c.group].width
+            total = total + costmodel.relu_many_cost(
+                [(c.n_elements, w)] * streams, cone=self.cone)
+        return total
+
+    def estimate(self, bandwidth_bps: Optional[float] = None,
+                 rtt_s: Optional[float] = None, *,
+                 network: Union[NetworkPreset, str, None] = None,
+                 streams: int = 1, compute_s: float = 0.0) -> float:
+        """End-to-end ReLU latency estimate (seconds) for one replay.
+
+        Pass explicit (bandwidth_bps, rtt_s) or one of the LAN/WAN/HIGHBW
+        presets matching the paper's §5.2 evaluation setup.
+        """
+        if network is not None:
+            preset = NETWORKS[network] if isinstance(network, str) else network
+            bandwidth_bps, rtt_s = preset.bandwidth_bps, preset.rtt_s
+        if bandwidth_bps is None or rtt_s is None:
+            raise ValueError("estimate needs (bandwidth_bps, rtt_s) or network=")
+        return costmodel.latency_model(self.cost(streams=streams),
+                                       bandwidth_bps, rtt_s, compute_s)
+
+    # -- (de)serialization ----------------------------------------------------
+    def to_json(self) -> Dict:
+        return {"name": self.name, "input_shape": list(self.input_shape),
+                "cone": self.cone, "hb": self.hb.to_json(),
+                "calls": [c.to_json() for c in self.calls]}
+
+    @staticmethod
+    def from_json(d: Dict) -> "Plan":
+        return Plan(calls=tuple(ReluCall.from_json(c) for c in d["calls"]),
+                    hb=HBConfig.from_json(d["hb"]),
+                    input_shape=tuple(int(s) for s in d["input_shape"]),
+                    cone=bool(d["cone"]), name=str(d.get("name", "")))
+
+    def save(self, path) -> None:
+        pathlib.Path(path).write_text(json.dumps(self.to_json(), indent=1))
+
+    @staticmethod
+    def load(path) -> "Plan":
+        return Plan.from_json(json.loads(pathlib.Path(path).read_text()))
+
+    @staticmethod
+    def from_hb(hb: HBConfig, cone: bool = False, name: str = "") -> "Plan":
+        """Trace-free plan (execution only; no cost/triple accounting)."""
+        return Plan(calls=(), hb=hb, cone=cone, name=name)
+
+
+def trace_plan(apply_fn, params, x, *, hb: Optional[HBConfig] = None,
+               n_groups: Optional[int] = None, cone: bool = False,
+               name: str = "") -> Plan:
+    """Shape-trace any ``apply_fn(params, x, relu_fn=...)`` model into a Plan.
+
+    ``x`` is an example input: an array, a ``jax.ShapeDtypeStruct``, or a
+    plain shape tuple (assumed float32).  The model is never executed —
+    ``jax.eval_shape`` drives the trace, so ``params`` may itself be a
+    ShapeDtypeStruct pytree (dry-run).  ``relu_fn(v, g)`` call sites are
+    recorded in call order; group element counts are accumulated per group,
+    and ``hb`` defaults to the exact 64-bit assignment.
+    """
+    if isinstance(x, (tuple, list)):
+        x = jax.ShapeDtypeStruct(tuple(x), jnp.float32)
+    calls: List[ReluCall] = []
+
+    def tracing_relu(v, g):
+        calls.append(ReluCall(int(v.size), int(g),
+                              tuple(int(s) for s in v.shape)))
+        return v
+
+    jax.eval_shape(lambda p, xx: apply_fn(p, xx, relu_fn=tracing_relu),
+                   params, x)
+    n = n_groups if n_groups is not None else (
+        hb.n_groups if hb is not None
+        else (max(c.group for c in calls) + 1 if calls else 0))
+    elements = [0] * n
+    for c in calls:
+        elements[c.group] += c.n_elements
+    if hb is None:
+        hb = HBConfig.exact(elements)
+    else:
+        # keep the caller's (k, m) layers but always carry the *traced*
+        # element counts, so budget accounting stays consistent with the
+        # plan's own calls (callers often pass placeholder counts)
+        assert hb.n_groups == n, (hb.n_groups, n)
+        hb = HBConfig(hb.layers, tuple(elements))
+    return Plan(calls=tuple(calls), hb=hb, input_shape=tuple(x.shape),
+                cone=cone, name=name)

@@ -1,0 +1,53 @@
+"""Session: who talks to whom, with which randomness and which triples.
+
+A Session owns the three runtime dependencies that call sites used to
+thread by hand (`key`/`comm`/`triples`): the party communicator backend
+(`SimComm`, `CoalescingComm`, `MeshComm`, or a counting wrapper), the PRNG
+stream protocol keys are drawn from, and a ``beaver.TripleProvider``
+deciding where each ReLU call's Beaver triples come from (inline from the
+call key, streamed from a TTP key, or popped from a precomputed pool).
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+
+from repro.core import beaver, comm as comm_lib
+
+
+class Session:
+    """Runtime context for private inference.
+
+    - ``comm``: party communicator (default ``SimComm`` — single host,
+      party dim materialised; pass ``CountingComm`` to measure, or keep
+      ``SimComm`` under ``shard_map`` for the mesh backend).
+    - ``key``: base PRNG key (or int seed) for per-request protocol keys;
+      ``next_key()`` advances the stream.
+    - ``provider``: ``beaver.TripleProvider`` (default ``InlineTTP`` —
+      triples derived inline from each call's key, the sim behaviour that
+      is bit-identical to the historical ``triples=None`` path).
+    """
+
+    def __init__(self, key: Union[int, jax.Array, None] = None, comm=None,
+                 provider: Optional[beaver.TripleProvider] = None):
+        self.comm = comm if comm is not None else comm_lib.SimComm()
+        self.provider = provider if provider is not None else beaver.InlineTTP()
+        if key is None:
+            key = 0
+        self._key = jax.random.PRNGKey(key) if isinstance(key, int) else key
+
+    def next_key(self) -> jax.Array:
+        """One fresh request key off the session's PRNG stream."""
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def offline(self, key, plan, requests: int = 1,
+                streams: int = 1) -> "Session":
+        """Switch this session to an eagerly pre-generated triple pool
+        covering ``requests`` sequential replays of ``plan``, each over
+        ``streams`` sibling streams (offline-TTP serving)."""
+        self.provider = beaver.EagerTTP(key, plan.triple_specs(),
+                                        cone=plan.cone, requests=requests,
+                                        streams=streams)
+        return self

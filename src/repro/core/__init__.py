@@ -4,7 +4,9 @@ Layering:
   ring         - Z/2^64 limb arithmetic (TPU-native, no int64)
   fixed        - fixed-point codec (CrypTen-compatible scale 2^16)
   shares       - arithmetic + packed binary secret sharing
-  beaver       - TTP triple provider
+  beaver       - TTP triple generation + TripleProvider protocol
+                 (inline / streaming / eager pool — consumed by
+                 repro.api.Session)
   comm         - party communicator (sim / mesh backends, counting +
                  coalescing wrappers for the round-fused engine)
   gmw          - A2B, DReLU, B2A, ReLU (exact Eq.2 + reduced-ring Eq.3),

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Iterable, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -131,3 +131,104 @@ def gen_relu_triples(key, n_elements: int, w: int, n_parties: int = 2,
     b2a = gen_arith(k3, (n_elements,), n_parties)
     mult = gen_arith(k4, (n_elements,), n_parties)
     return ReluTriples(bin_init, bin_levels, b2a, mult)
+
+
+# ---------------------------------------------------------------------------
+# Triple providers: who supplies the ReluTriples each protocol call consumes
+# ---------------------------------------------------------------------------
+
+def gen_plan_triples(key, specs: Sequence[Tuple[int, int]],
+                     cone: bool = False) -> List[Optional[ReluTriples]]:
+    """One ReluTriples bundle per (n_elements, width) spec, in order.
+
+    Culled (width 0) and empty (n_elements 0) specs consume no triples and
+    map to None.  This is the offline-TTP bulk generator behind
+    ``Plan.triple_specs()`` and the old ``models.resnet.gen_mpc_triples``.
+    """
+    keys = jax.random.split(key, max(len(specs), 1))
+    return [None if w == 0 or n == 0 else gen_relu_triples(k, n, w, cone=cone)
+            for k, (n, w) in zip(keys, specs)]
+
+
+@runtime_checkable
+class TripleProvider(Protocol):
+    """Where a Session's protocol calls get their Beaver triples.
+
+    ``relu_triples`` is invoked once per ReLU call per stream, in call
+    order; returning None means "derive the triples inline from the call's
+    own PRNG key" (the sim-backend default, bit-identical to the historical
+    ``triples=None`` path).  Width-0 (culled) and zero-element calls must
+    return None — they consume nothing.
+    """
+
+    def relu_triples(self, n_elements: int, width: int,
+                     cone: bool = False) -> Optional[ReluTriples]:
+        ...
+
+
+class InlineTTP:
+    """Sim-backend default: triples are derived inline from each protocol
+    call's PRNG key (exactly the historical ``triples=None`` behaviour, so
+    outputs stay bit-identical to the pre-Session call sites)."""
+
+    def relu_triples(self, n_elements: int, width: int,
+                     cone: bool = False) -> None:
+        return None
+
+
+class StreamingTTP:
+    """Per-request streaming TTP: each bundle is generated on demand from
+    this provider's own PRNG stream at call time (no storage, but the
+    triple material is independent of the protocol keys, as in a real
+    deployment where the TTP streams triples to the parties)."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def relu_triples(self, n_elements: int, width: int,
+                     cone: bool = False) -> Optional[ReluTriples]:
+        if width == 0 or n_elements == 0:
+            return None
+        self._key, k = jax.random.split(self._key)
+        return gen_relu_triples(k, n_elements, width, cone=cone)
+
+
+class TriplePool:
+    """Precomputed pool consumed in call order (the mesh-serving path:
+    bundles enter the jitted step as inputs).  ``bundles`` holds one entry
+    per ReLU call per stream, call-major / stream-minor, with None for
+    culled or empty calls — the layout ``gen_plan_triples`` emits."""
+
+    def __init__(self, bundles: Iterable[Optional[ReluTriples]]):
+        self._iter = iter(bundles)
+        self.consumed = 0
+
+    def relu_triples(self, n_elements: int, width: int,
+                     cone: bool = False) -> Optional[ReluTriples]:
+        try:
+            tri = next(self._iter)
+        except StopIteration:
+            raise RuntimeError(
+                f"TriplePool exhausted after {self.consumed} ReLU calls — "
+                "the pool must hold one bundle per ReLU call per stream "
+                "(see Plan.triple_specs / beaver.gen_plan_triples)")
+        self.consumed += 1
+        return tri
+
+
+class EagerTTP(TriplePool):
+    """Eager offline TTP: pre-generates the whole pool for ``requests``
+    sequential replays of a plan's triple specs, each replay serving
+    ``streams`` sibling streams, then hands bundles out in consumption
+    order.  ``specs`` is ``Plan.triple_specs()`` (or any
+    (n_elements, width) sequence).
+
+    Layout matches the replay's pop order (see TriplePool): within one
+    replay, call-major / stream-minor — every ReLU call pops one bundle
+    per sibling stream before the next call; replays follow sequentially.
+    """
+
+    def __init__(self, key, specs: Sequence[Tuple[int, int]],
+                 cone: bool = False, requests: int = 1, streams: int = 1):
+        expanded = [s for s in specs for _ in range(streams)] * requests
+        super().__init__(gen_plan_triples(key, expanded, cone=cone))

@@ -36,6 +36,13 @@ class HBLayer:
         """Zero assigned bits degenerates ReLU to identity (ReLU culling)."""
         return self.k == self.m
 
+    def to_json(self) -> Dict:
+        return {"k": self.k, "m": self.m}
+
+    @staticmethod
+    def from_json(d: Dict) -> "HBLayer":
+        return HBLayer(k=int(d["k"]), m=int(d["m"]))
+
 
 @dataclasses.dataclass(frozen=True)
 class HBConfig:
@@ -73,6 +80,15 @@ class HBConfig:
         return HBConfig(
             tuple(HBLayer() for _ in group_elements), tuple(group_elements)
         )
+
+    def to_json(self) -> Dict:
+        return {"layers": [l.to_json() for l in self.layers],
+                "group_elements": list(self.group_elements)}
+
+    @staticmethod
+    def from_json(d: Dict) -> "HBConfig":
+        return HBConfig(tuple(HBLayer.from_json(l) for l in d["layers"]),
+                        tuple(int(e) for e in d["group_elements"]))
 
 
 def safe_k(max_abs_int: float, m: int = 0, margin_bits: int = 0) -> int:

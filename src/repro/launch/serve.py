@@ -20,9 +20,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import api
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.configs.resnet import ResNetConfig
-from repro.core import MPCTensor, beaver, comm as comm_lib, fixed, ring
+from repro.core import beaver
 from repro.core.hummingbird import HBConfig
 from repro.models import encdec, lm, resnet
 
@@ -76,16 +77,16 @@ def make_mpc_serve_step(rcfg: ResNetConfig, hb: Optional[HBConfig],
 
     lo/hi: Ring64 limbs of the input shares, shape (2, B, 3, H, W), party
     dim sharded over the mesh's party/pod axis by the caller's in_shardings.
+
+    Thin wrapper over ``repro.api``: the plan replay and triple pool come
+    from ``PrivateModel.serve_step`` (SimComm materialises the party dim;
+    XLA shards every exchange into a collective-permute).
     """
-    cm = comm_lib.SimComm()  # party dim materialised; XLA shards it
-
-    def step(params, lo, hi, triples, key):
-        x = MPCTensor(ring.Ring64(lo, hi))
-        out = resnet.mpc_apply(params, x, rcfg, key, hb=hb, comm=cm,
-                               triples=triples, cone=cone)
-        return out.data.lo, out.data.hi
-
-    return step
+    model = api.compile(None, None, rcfg,
+                        api.Plan.from_hb(resnet.hb_or_exact(hb, rcfg),
+                                         cone=cone, name=rcfg.name),
+                        api.Session())
+    return model.serve_step()
 
 
 def mpc_input_specs(rcfg: ResNetConfig, batch: int, mesh,
@@ -104,9 +105,10 @@ def mpc_input_specs(rcfg: ResNetConfig, batch: int, mesh,
     params = jax.tree_util.tree_map(
         lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep), params)
 
-    plan = resnet.relu_plan(params, rcfg, batch)
+    plan = resnet.trace(params, rcfg, batch,
+                        hb=resnet.hb_or_exact(hb, rcfg), cone=cone)
     triples = jax.eval_shape(
-        lambda k: resnet.gen_mpc_triples(k, plan, hb, rcfg, cone=cone),
+        lambda k: beaver.gen_plan_triples(k, plan.triple_specs(), cone=cone),
         jax.ShapeDtypeStruct((2,), jnp.uint32))
 
     def triple_sharding(path, leaf):

@@ -11,14 +11,15 @@ each group takes one HummingBird (k, m) assignment.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.api import register_mpc_forward
 from repro.configs.resnet import ResNetConfig
-from repro.core import MPCTensor, beaver, comm as comm_lib
-from repro.core.hummingbird import HBConfig, HBLayer
+from repro.core import MPCTensor, beaver
+from repro.core.hummingbird import HBConfig
 
 
 def _conv_init(key, cout, cin, k):
@@ -153,31 +154,38 @@ def relu_group_elements(params, cfg: ResNetConfig, in_hw: int = 0) -> List[int]:
 # MPC path
 # ---------------------------------------------------------------------------
 
-def relu_plan(params, cfg: ResNetConfig, batch: int, hw: int = 0):
-    """Shape-trace: (n_elements, group) per ReLU call, in call order.
-    Drives offline TTP triple generation for the mesh serving step."""
+def hb_or_exact(hb: Optional[HBConfig], cfg: ResNetConfig) -> HBConfig:
+    return hb if hb is not None else HBConfig.exact((0,) * n_relu_groups(cfg))
+
+
+def trace(params, cfg: ResNetConfig, batch: int, hw: int = 0,
+          hb: Optional[HBConfig] = None, cone: bool = False):
+    """Trace this model into a ``repro.api.Plan`` (the generic planner)."""
+    from repro import api
+
     hw = hw or cfg.in_hw
-    plan: List[Tuple[int, int]] = []
+    return api.trace_plan(
+        lambda p, x, relu_fn=None: apply(p, x, cfg, relu_fn=relu_fn),
+        params, (batch, 3, hw, hw), hb=hb,
+        n_groups=n_relu_groups(cfg) if hb is None else None,
+        cone=cone, name=cfg.name)
 
-    def tracing_relu(v, g):
-        plan.append((int(v.size), g))
-        return jax.nn.relu(v)
 
-    jax.eval_shape(lambda p, x: apply(p, x, cfg, relu_fn=tracing_relu),
-                   params, jax.ShapeDtypeStruct((batch, 3, hw, hw), jnp.float32))
-    return plan
+def relu_plan(params, cfg: ResNetConfig, batch: int, hw: int = 0):
+    """Deprecated shim over ``repro.api.trace_plan``: (n_elements, group)
+    per ReLU call, in call order."""
+    plan = trace(params, cfg, batch, hw)
+    return [(c.n_elements, c.group) for c in plan.calls]
 
 
 def gen_mpc_triples(key, plan, hb: Optional[HBConfig], cfg: ResNetConfig,
                     cone: bool = False):
-    """Offline TTP phase: one ReluTriples bundle per ReLU call (None for
-    culled width-0 groups, which consume no triples)."""
-    hb_layers = (hb.layers if hb is not None
-                 else tuple(HBLayer() for _ in range(n_relu_groups(cfg))))
-    keys = jax.random.split(key, len(plan))
-    return [None if hb_layers[g].is_identity
-            else beaver.gen_relu_triples(k, n, hb_layers[g].width, cone=cone)
-            for k, (n, g) in zip(keys, plan)]
+    """Deprecated shim over ``beaver.gen_plan_triples``: one ReluTriples
+    bundle per ReLU call (None for culled width-0 groups).  ``plan`` is the
+    (n_elements, group) list from ``relu_plan``."""
+    hb_layers = hb_or_exact(hb, cfg).layers
+    return beaver.gen_plan_triples(
+        key, [(n, hb_layers[g].width) for n, g in plan], cone=cone)
 
 
 def _mpc_forward(params, hs: List[MPCTensor], cfg: ResNetConfig, relu_fn,
@@ -224,57 +232,47 @@ def _mpc_forward(params, hs: List[MPCTensor], cfg: ResNetConfig, relu_fn,
             .add_public(params["fc"]["b"], comm) for h in hs]
 
 
+# the generic compiler resolves this forward from the config type
+register_mpc_forward(ResNetConfig, _mpc_forward)
+
+
+def _compiled(params, cfg: ResNetConfig, hb, comm, triples, cone):
+    """Shared shim body: bind the old threaded arguments into a Plan +
+    Session and compile (see repro.api for the first-class entry point)."""
+    from repro import api
+
+    provider = beaver.TriplePool(triples) if triples is not None else None
+    session = api.Session(comm=comm, provider=provider)
+    plan = api.Plan.from_hb(hb_or_exact(hb, cfg), cone=cone, name=cfg.name)
+    return api.compile(
+        lambda p, x, relu_fn=None: apply(p, x, cfg, relu_fn=relu_fn),
+        params, cfg, plan, session)
+
+
 def mpc_apply(params, x: MPCTensor, cfg: ResNetConfig, key,
               hb: Optional[HBConfig] = None, comm=None,
               triples: Optional[list] = None, cone: bool = False) -> MPCTensor:
-    """Secret-shared inference.  BN folded into convs; ReLU via GMW with
-    the HummingBird (k, m) of each group.  When `triples` is given (mesh
-    serving), they are consumed in call order; otherwise generated inline
-    (sim backend)."""
-    comm = comm or comm_lib.SimComm()
-    hb_layers = (hb.layers if hb is not None
-                 else tuple(HBLayer() for _ in range(n_relu_groups(cfg))))
-    key_iter = iter(jax.random.split(key, 256))
-    triple_iter = iter(triples) if triples is not None else None
+    """Deprecated shim over ``repro.api.compile``: secret-shared inference.
 
-    def _relu(ts: List[MPCTensor], g: int) -> List[MPCTensor]:
-        tri = next(triple_iter) if triple_iter is not None else None
-        return [ts[0].relu(next(key_iter), comm=comm, hb=hb_layers[g],
-                           triples=tri, cone=cone)]
-
-    return _mpc_forward(params, [x], cfg, _relu, comm)[0]
+    BN folded into convs; ReLU via GMW with the HummingBird (k, m) of each
+    group.  When `triples` is given (mesh serving), they are consumed in
+    call order; otherwise generated inline (sim backend).  Outputs are
+    bit-identical to the pre-Plan/Session implementation (asserted in
+    tests/test_api.py)."""
+    return _compiled(params, cfg, hb, comm, triples, cone)(x, key=key)
 
 
 def mpc_apply_many(params, xs: Sequence[MPCTensor], cfg: ResNetConfig, key,
                    hb: Optional[HBConfig] = None, comm=None,
                    triples: Optional[list] = None,
                    cone: bool = False) -> List[MPCTensor]:
-    """Round-fused serving: N sibling inference streams share ReLU rounds.
-
-    Streams run the same weights but may differ in batch size or spatial
-    resolution; at every ReLU point the sibling tensors are evaluated by
-    ``nn.common.mpc_relu_many``, so the layer pays max-over-streams
-    protocol rounds (one coalesced exchange per round) instead of the
-    per-stream sum — the round-latency term of the serving cost drops by
-    ~len(xs) while total bytes stay unchanged.
+    """Deprecated shim over ``repro.api.compile``: N sibling inference
+    streams share ReLU rounds (max-over-streams protocol rounds per layer,
+    one coalesced exchange per round — see PrivateModel.__call__).
 
     ``triples`` keeps the offline TTP split: one entry per ReLU call (in
-    call order, as produced by ``relu_plan``/``gen_mpc_triples`` for each
-    stream), each a sequence with one ReluTriples bundle (or None for
+    call order), each a sequence with one ReluTriples bundle (or None for
     culled groups) per stream."""
-    from repro.nn import common as nn_common
-
-    comm = comm or comm_lib.SimComm()
-    hb_layers = (hb.layers if hb is not None
-                 else tuple(HBLayer() for _ in range(n_relu_groups(cfg))))
-    key_iter = iter(jax.random.split(key, 256 * max(1, len(xs))))
-    triple_iter = iter(triples) if triples is not None else None
-
-    def _relu(ts: List[MPCTensor], g: int) -> List[MPCTensor]:
-        tris = next(triple_iter) if triple_iter is not None else None
-        keys = [next(key_iter) for _ in ts]
-        return nn_common.mpc_relu_many(keys, ts, hbs=[hb_layers[g]] * len(ts),
-                                       comm=comm, triples_list=tris,
-                                       cone=cone)
-
-    return _mpc_forward(params, list(xs), cfg, _relu, comm)
+    flat = ([b for call in triples for b in call]
+            if triples is not None else None)
+    return _compiled(params, cfg, hb, comm, flat, cone)(list(xs), key=key)

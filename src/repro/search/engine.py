@@ -17,12 +17,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.plan import Plan
 from repro.core.hummingbird import HBConfig, HBLayer, RING_BITS, safe_k
 from . import simulator
 
@@ -36,17 +36,60 @@ class SearchResult:
     search_time_s: float
     nodes_visited: int
     nodes_pruned: int
+    plan: Optional[Plan] = None   # set when the search was given a Plan
+
+    def to_json(self) -> Dict:
+        return {"config": self.config.to_json(),
+                "accuracy": self.accuracy,
+                "baseline_accuracy": self.baseline_accuracy,
+                "budget_fraction": self.budget_fraction,
+                "search_time_s": self.search_time_s,
+                "nodes_visited": self.nodes_visited,
+                "nodes_pruned": self.nodes_pruned,
+                "plan": self.plan.to_json() if self.plan is not None else None}
+
+    @staticmethod
+    def from_json(d: Dict) -> "SearchResult":
+        return SearchResult(
+            config=HBConfig.from_json(d["config"]),
+            accuracy=float(d["accuracy"]),
+            baseline_accuracy=float(d["baseline_accuracy"]),
+            budget_fraction=float(d["budget_fraction"]),
+            search_time_s=float(d["search_time_s"]),
+            nodes_visited=int(d["nodes_visited"]),
+            nodes_pruned=int(d["nodes_pruned"]),
+            plan=(Plan.from_json(d["plan"])
+                  if d.get("plan") is not None else None))
 
 
 def _eval(apply_fn, params, xs, ys, cfg, key):
     return simulator.evaluate_accuracy(apply_fn, params, xs, ys, cfg, key)
 
 
-def search_eco(apply_fn, params, xs, ys, group_elements: Sequence[int],
+def _groups_and_plan(group_elements: Union[Plan, Sequence[int]]):
+    """Search entry points accept either raw per-group element counts or a
+    ``repro.api.Plan`` (whose found config is attached to the result)."""
+    if isinstance(group_elements, Plan):
+        return list(group_elements.group_elements), group_elements
+    return list(group_elements), None
+
+
+def _result(cfg: HBConfig, plan: Optional[Plan], **kw) -> SearchResult:
+    return SearchResult(config=cfg, budget_fraction=cfg.budget_fraction(),
+                        plan=plan.with_hb(cfg) if plan is not None else None,
+                        **kw)
+
+
+def search_eco(apply_fn, params, xs, ys,
+               group_elements: Union[Plan, Sequence[int]],
                key, margin_bits: int = 1) -> SearchResult:
     """Zero-error config: per-group smallest k whose validation *outputs*
-    are bit-identical to the exact model (the paper's eco criterion), m=0."""
+    are bit-identical to the exact model (the paper's eco criterion), m=0.
+
+    ``group_elements`` may be a ``repro.api.Plan`` (traced offline); the
+    result then carries ``plan.with_hb(found_config)`` ready to save."""
     t0 = time.time()
+    group_elements, plan = _groups_and_plan(group_elements)
     n_groups = len(group_elements)
     base_cfg = HBConfig.exact(group_elements)
     base_acc = _eval(apply_fn, params, xs, ys, base_cfg, key)
@@ -74,29 +117,47 @@ def search_eco(apply_fn, params, xs, ys, group_elements: Sequence[int],
         layers.append(HBLayer(k=k, m=0))
     cfg = HBConfig(tuple(layers), tuple(group_elements))
     acc = _eval(apply_fn, params, xs, ys, cfg, key)
-    return SearchResult(cfg, acc, base_acc, cfg.budget_fraction(),
-                        time.time() - t0, nodes, 0)
+    return _result(cfg, plan, accuracy=acc, baseline_accuracy=base_acc,
+                   search_time_s=time.time() - t0, nodes_visited=nodes,
+                   nodes_pruned=0)
 
 
-def search_budget(apply_fn, params, xs, ys, group_elements: Sequence[int],
+def search_budget(apply_fn, params, xs, ys,
+                  group_elements: Union[Plan, Sequence[int]],
                   key, budget: float, *, acc_threshold_drop: float = 0.10,
                   bit_choices: Optional[Sequence[int]] = None,
                   max_k: int = 28) -> SearchResult:
-    """HummingBird-b: budgeted DFS with locally-optimal (k, m)."""
+    """HummingBird-b: budgeted DFS with locally-optimal (k, m).
+
+    ``bit_choices`` may include 0: the group's ReLU is then *culled*
+    entirely (width-0 identity layer, zero rounds/bytes at serve time —
+    the `relu_many`-friendly choice the round-fused engine exploits).
+    ``group_elements`` may be a ``repro.api.Plan``; the result then
+    carries ``plan.with_hb(found_config)``.
+    """
     t0 = time.time()
+    group_elements, plan = _groups_and_plan(group_elements)
     n_groups = len(group_elements)
     elements = np.asarray(group_elements, np.float64)
     total_bits = RING_BITS * elements.sum()
     base_cfg = HBConfig.exact(group_elements)
     base_acc = _eval(apply_fn, params, xs, ys, base_cfg, key)
     threshold = base_acc - acc_threshold_drop
-    bit_choices = sorted(bit_choices or (4, 5, 6, 8, 10), reverse=True)
+    bit_choices = sorted(bit_choices or (0, 4, 5, 6, 8, 10), reverse=True)
 
     best: dict = {"acc": -1.0, "layers": None}
     stats = {"visited": 0, "pruned": 0}
 
     def local_best(prefix: List[HBLayer], g: int, width: int):
         """Locally-optimal (k, m) with k - m = width for group g."""
+        if width == 0:
+            # culling: every k = m is the same identity layer
+            cand = prefix + [HBLayer(k=0, m=0)] + \
+                [HBLayer() for _ in range(n_groups - g - 1)]
+            stats["visited"] += 1
+            return HBLayer(k=0, m=0), _eval(
+                apply_fn, params, xs, ys,
+                HBConfig(tuple(cand), tuple(group_elements)), key)
         best_local = (None, -1.0)
         for k in range(width, max_k + 1):
             m = k - width
@@ -134,13 +195,36 @@ def search_budget(apply_fn, params, xs, ys, group_elements: Sequence[int],
 
     dfs([], 0, 0.0)
     if best["layers"] is None:
-        # nothing met the budget+threshold; fall back to uniform smallest
-        width = bit_choices[-1]
-        best["layers"] = tuple(HBLayer(k=width + 13, m=13)
-                               for _ in range(n_groups))
+        # Nothing met the budget+threshold; fall back to the uniform
+        # smallest non-zero width, placing each group's window at the
+        # largest k with zero sign-estimation error (Theorem 1 via safe_k)
+        # clamped to the searched k-range — never beyond max_k.  With only
+        # width 0 on offer, the fallback is the all-culled identity config.
+        width = min(min((w for w in bit_choices if w > 0), default=0),
+                    max_k)
+        if width == 0:
+            best["layers"] = tuple(HBLayer(k=0, m=0)
+                                   for _ in range(n_groups))
+        else:
+            max_ints = simulator.max_activation_ints(apply_fn, params, xs,
+                                                     n_groups)
+            layers = []
+            for g in range(n_groups):
+                k = width
+                for _ in range(4):   # safe_k's headroom term depends on m
+                    k_next = max(width, min(max_k,
+                                            safe_k(max_ints[g],
+                                                   m=k - width)))
+                    if k_next == k:
+                        break
+                    k = k_next
+                layers.append(HBLayer(k=k, m=k - width))
+            best["layers"] = tuple(layers)
         best["acc"] = _eval(apply_fn, params, xs, ys,
                             HBConfig(best["layers"], tuple(group_elements)),
                             key)
     cfg = HBConfig(best["layers"], tuple(group_elements))
-    return SearchResult(cfg, best["acc"], base_acc, cfg.budget_fraction(),
-                        time.time() - t0, stats["visited"], stats["pruned"])
+    return _result(cfg, plan, accuracy=best["acc"], baseline_accuracy=base_acc,
+                   search_time_s=time.time() - t0,
+                   nodes_visited=stats["visited"],
+                   nodes_pruned=stats["pruned"])

@@ -1,0 +1,300 @@
+"""Plan/Session/compile API: bit-identity of the deprecation shims vs the
+pre-refactor replay, Plan JSON round-trips, triple providers, and edge
+plans (all-identity, single-group custom model, empty batch)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs import RESNET_SMOKE
+from repro.core import MPCTensor, beaver, comm as comm_lib, ring
+from repro.core.hummingbird import HBConfig, HBLayer
+from repro.models import resnet
+from repro.search.engine import SearchResult
+
+
+# ---------------------------------------------------------------------------
+# Frozen pre-refactor replay (the seed-era mpc_apply/mpc_apply_many bodies),
+# kept here as the regression oracle — the shims and the api path must stay
+# bit-identical to it.
+# ---------------------------------------------------------------------------
+
+def legacy_mpc_apply(params, x, cfg, key, hb=None, comm=None, triples=None,
+                     cone=False):
+    comm = comm or comm_lib.SimComm()
+    hb_layers = (hb.layers if hb is not None else
+                 tuple(HBLayer() for _ in range(resnet.n_relu_groups(cfg))))
+    key_iter = iter(jax.random.split(key, 256))
+    triple_iter = iter(triples) if triples is not None else None
+
+    def _relu(ts, g):
+        tri = next(triple_iter) if triple_iter is not None else None
+        return [ts[0].relu(next(key_iter), comm=comm, hb=hb_layers[g],
+                           triples=tri, cone=cone)]
+
+    return resnet._mpc_forward(params, [x], cfg, _relu, comm)[0]
+
+
+def legacy_mpc_apply_many(params, xs, cfg, key, hb=None, comm=None,
+                          triples=None, cone=False):
+    from repro.nn import common as nn_common
+
+    comm = comm or comm_lib.SimComm()
+    hb_layers = (hb.layers if hb is not None else
+                 tuple(HBLayer() for _ in range(resnet.n_relu_groups(cfg))))
+    key_iter = iter(jax.random.split(key, 256 * max(1, len(xs))))
+    triple_iter = iter(triples) if triples is not None else None
+
+    def _relu(ts, g):
+        tris = next(triple_iter) if triple_iter is not None else None
+        keys = [next(key_iter) for _ in ts]
+        return nn_common.mpc_relu_many(keys, ts, hbs=[hb_layers[g]] * len(ts),
+                                       comm=comm, triples_list=tris,
+                                       cone=cone)
+
+    return resnet._mpc_forward(params, list(xs), cfg, _relu, comm)
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 8, 8)) * 0.5
+
+    def afn(p, v, relu_fn=None):
+        return resnet.apply(p, v, RESNET_SMOKE, relu_fn=relu_fn)
+
+    plan = api.trace_plan(afn, params, x.shape, name="smoke")
+    return afn, params, x, plan
+
+
+def _mixed_hb(plan):
+    """(21,13) everywhere but the last group culled."""
+    return HBConfig(tuple([HBLayer(k=21, m=13)] * (plan.n_groups - 1)
+                          + [HBLayer(k=13, m=13)]), plan.group_elements)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: api path == deprecation shims == pre-refactor replay
+# ---------------------------------------------------------------------------
+
+def test_compile_bit_identical_to_prerefactor(smoke_setup):
+    afn, params, x, plan = smoke_setup
+    X = MPCTensor.from_plain(jax.random.PRNGKey(2), x)
+    for hb in (None, _mixed_hb(plan)):
+        want = legacy_mpc_apply(params, X, RESNET_SMOKE,
+                                jax.random.PRNGKey(3), hb=hb)
+        run_plan = plan.with_hb(hb) if hb is not None else plan
+        model = api.compile(afn, params, RESNET_SMOKE, run_plan,
+                            api.Session())
+        got = model(X, key=jax.random.PRNGKey(3))
+        np.testing.assert_array_equal(ring.to_uint64_np(got.data),
+                                      ring.to_uint64_np(want.data))
+        # the shim delegates to the same machinery — also bit-identical
+        shim = resnet.mpc_apply(params, X, RESNET_SMOKE,
+                                jax.random.PRNGKey(3), hb=hb)
+        np.testing.assert_array_equal(ring.to_uint64_np(shim.data),
+                                      ring.to_uint64_np(want.data))
+
+
+def test_mpc_apply_many_shim_bit_identical(smoke_setup):
+    afn, params, x, plan = smoke_setup
+    Xs = [MPCTensor.from_plain(jax.random.PRNGKey(10 + i), x)
+          for i in range(2)]
+    want = legacy_mpc_apply_many(params, Xs, RESNET_SMOKE,
+                                 jax.random.PRNGKey(4))
+    got = resnet.mpc_apply_many(params, Xs, RESNET_SMOKE,
+                                jax.random.PRNGKey(4))
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(ring.to_uint64_np(a.data),
+                                      ring.to_uint64_np(b.data))
+
+
+def test_serve_step_bit_identical_with_pool(smoke_setup):
+    afn, params, x, plan = smoke_setup
+    hb = _mixed_hb(plan)
+    run_plan = plan.with_hb(hb)
+    pool = beaver.gen_plan_triples(jax.random.PRNGKey(5),
+                                   run_plan.triple_specs())
+    X = MPCTensor.from_plain(jax.random.PRNGKey(6), x)
+    want = legacy_mpc_apply(params, X, RESNET_SMOKE, jax.random.PRNGKey(7),
+                            hb=hb, triples=pool)
+    model = api.compile(afn, params, RESNET_SMOKE, run_plan, api.Session())
+    lo, hi = model.serve_step()(params, X.data.lo, X.data.hi, pool,
+                                jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(
+        ring.to_uint64_np(ring.Ring64(lo, hi)),
+        ring.to_uint64_np(want.data))
+
+
+# ---------------------------------------------------------------------------
+# Plan JSON round-trips
+# ---------------------------------------------------------------------------
+
+def test_plan_json_roundtrip_with_identical_cost(smoke_setup, tmp_path):
+    _, params, x, plan = smoke_setup
+    plan = plan.with_hb(_mixed_hb(plan))
+    path = tmp_path / "plan.json"
+    plan.save(path)
+    loaded = api.Plan.load(path)
+    assert loaded == plan
+    assert loaded.cost() == plan.cost()
+    assert loaded.cost(streams=3) == plan.cost(streams=3)
+    assert loaded.estimate(network=api.WAN) == plan.estimate(network=api.WAN)
+    assert loaded.triple_specs() == plan.triple_specs()
+
+
+def test_hbconfig_and_searchresult_json_roundtrip(smoke_setup):
+    _, _, _, plan = smoke_setup
+    hb = _mixed_hb(plan)
+    assert HBConfig.from_json(hb.to_json()) == hb
+    res = SearchResult(config=hb, accuracy=0.9, baseline_accuracy=0.95,
+                       budget_fraction=hb.budget_fraction(),
+                       search_time_s=1.5, nodes_visited=10, nodes_pruned=3,
+                       plan=plan.with_hb(hb))
+    back = SearchResult.from_json(res.to_json())
+    assert back.config == res.config
+    assert back.plan == res.plan
+    assert back.accuracy == res.accuracy
+    assert back.nodes_pruned == res.nodes_pruned
+
+
+# ---------------------------------------------------------------------------
+# Edge plans
+# ---------------------------------------------------------------------------
+
+def test_all_identity_plan_zero_comm(smoke_setup):
+    """Width-0 everywhere: private inference degrades to the linear model
+    at zero protocol communication."""
+    afn, params, x, plan = smoke_setup
+    hb = HBConfig(tuple(HBLayer(k=13, m=13) for _ in range(plan.n_groups)),
+                  plan.group_elements)
+    cm = comm_lib.CountingComm()
+    model = api.compile(afn, params, RESNET_SMOKE, plan.with_hb(hb),
+                        api.Session(comm=cm))
+    X = MPCTensor.from_plain(jax.random.PRNGKey(2), x)
+    out = model(X)
+    assert cm.n_swaps == 0
+    assert plan.with_hb(hb).cost().rounds == 0
+    assert plan.with_hb(hb).cost().bytes_tx == 0
+    ref = afn(params, x, relu_fn=lambda v, g: v)   # identity-ReLU plaintext
+    np.testing.assert_allclose(out.reveal_np(), np.asarray(ref), atol=2e-2)
+
+
+def test_single_group_custom_model():
+    """A model the repo has never seen: one dense->relu->dense block with
+    an explicit mpc_forward — the planner and compiler are model-agnostic."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    params = {"w1": jax.random.normal(k1, (6, 8)) * 0.5,
+              "w2": jax.random.normal(k2, (8, 4)) * 0.5}
+
+    def afn(p, v, relu_fn=None):
+        relu = relu_fn or (lambda h, g: jax.nn.relu(h))
+        return relu(v @ p["w1"], 0) @ p["w2"]
+
+    def mpc_forward(p, hs, cfg, relu_fn, comm):
+        hs = [h.matmul_public(p["w1"]) for h in hs]
+        hs = relu_fn(hs, 0)
+        return [h.matmul_public(p["w2"]) for h in hs]
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, 6))
+    plan = api.trace_plan(afn, params, x.shape, name="mlp")
+    assert plan.n_groups == 1 and len(plan.calls) == 1
+    assert plan.calls[0].n_elements == 5 * 8
+    plan = plan.with_hb(HBConfig((HBLayer(k=24, m=0),), plan.group_elements))
+    model = api.compile(afn, params, cfg=None, plan=plan,
+                        session=api.Session(key=1), mpc_forward=mpc_forward)
+    X = model.encrypt(jax.random.PRNGKey(4), x)
+    out = model(X)
+    np.testing.assert_allclose(out.reveal_np(), np.asarray(afn(params, x)),
+                               atol=2e-2)
+
+
+def test_empty_batch(smoke_setup):
+    """Batch 0 flows through the whole private forward: correct output
+    shape, zero protocol communication."""
+    afn, params, _, plan = smoke_setup
+    x = jnp.zeros((0, 3, 8, 8))
+    cm = comm_lib.CountingComm()
+    model = api.compile(afn, params, RESNET_SMOKE, plan.with_hb(_mixed_hb(plan)),
+                        api.Session(comm=cm))
+    X = MPCTensor.from_plain(jax.random.PRNGKey(2), x)
+    out = model(X)
+    assert out.shape == (0, RESNET_SMOKE.n_classes)
+    assert cm.n_swaps == 0
+    assert out.reveal_np().shape == (0, RESNET_SMOKE.n_classes)
+
+
+# ---------------------------------------------------------------------------
+# Triple providers
+# ---------------------------------------------------------------------------
+
+def test_streaming_and_eager_providers(smoke_setup):
+    afn, params, x, plan = smoke_setup
+    run_plan = plan.with_hb(_mixed_hb(plan))
+    want = np.argmax(np.asarray(afn(params, x)), -1)
+    for provider in (beaver.StreamingTTP(jax.random.PRNGKey(8)),
+                     beaver.EagerTTP(jax.random.PRNGKey(9),
+                                     run_plan.triple_specs(), requests=2)):
+        model = api.compile(afn, params, RESNET_SMOKE, run_plan,
+                            api.Session(key=2, provider=provider))
+        X = MPCTensor.from_plain(jax.random.PRNGKey(10), x)
+        for _ in range(2):   # EagerTTP pool sized for exactly two requests
+            out = model(X)
+            np.testing.assert_array_equal(np.argmax(out.reveal_np(), -1),
+                                          want)
+
+
+def test_eager_pool_feeds_sibling_streams(smoke_setup):
+    """EagerTTP(streams=N) lays bundles out call-major/stream-minor, the
+    order a multi-stream replay pops them in."""
+    afn, params, x, plan = smoke_setup
+    run_plan = plan.with_hb(_mixed_hb(plan))
+    want = np.argmax(np.asarray(afn(params, x)), -1)
+    pool = beaver.EagerTTP(jax.random.PRNGKey(20), run_plan.triple_specs(),
+                           streams=2)
+    model = api.compile(afn, params, RESNET_SMOKE, run_plan,
+                        api.Session(key=5, provider=pool))
+    Xs = [MPCTensor.from_plain(jax.random.PRNGKey(21 + i), x)
+          for i in range(2)]
+    for out in model(Xs):
+        np.testing.assert_array_equal(np.argmax(out.reveal_np(), -1), want)
+
+
+def test_trace_free_plan_cost_raises(smoke_setup):
+    _, _, _, plan = smoke_setup
+    bare = api.Plan.from_hb(_mixed_hb(plan))
+    with pytest.raises(ValueError, match="traced plan"):
+        bare.cost()
+    with pytest.raises(ValueError, match="traced plan"):
+        bare.estimate(network=api.LAN)
+
+
+def test_triple_pool_exhaustion_raises(smoke_setup):
+    afn, params, x, plan = smoke_setup
+    run_plan = plan.with_hb(_mixed_hb(plan))
+    pool = beaver.EagerTTP(jax.random.PRNGKey(11), run_plan.triple_specs(),
+                           requests=1)
+    model = api.compile(afn, params, RESNET_SMOKE, run_plan,
+                        api.Session(key=3, provider=pool))
+    X = MPCTensor.from_plain(jax.random.PRNGKey(12), x)
+    model(X)
+    with pytest.raises(RuntimeError, match="TriplePool exhausted"):
+        model(X)
+
+
+def test_session_owns_prng_stream(smoke_setup):
+    """Two calls without explicit keys draw different protocol randomness
+    but reveal the same prediction; an explicit key reproduces exactly."""
+    afn, params, x, plan = smoke_setup
+    model = api.compile(afn, params, RESNET_SMOKE,
+                        plan.with_hb(_mixed_hb(plan)), api.Session(key=4))
+    X = MPCTensor.from_plain(jax.random.PRNGKey(13), x)
+    a, b = model(X), model(X)
+    assert not np.array_equal(ring.to_uint64_np(a.data),
+                              ring.to_uint64_np(b.data))
+    np.testing.assert_allclose(a.reveal_np(), b.reveal_np(), atol=2e-2)
+    c1 = model(X, key=jax.random.PRNGKey(42))
+    c2 = model(X, key=jax.random.PRNGKey(42))
+    np.testing.assert_array_equal(ring.to_uint64_np(c1.data),
+                                  ring.to_uint64_np(c2.data))

@@ -103,6 +103,43 @@ def test_identity_layer_costs_nothing():
     assert cm.n_swaps == 0
 
 
+def test_plan_cost_and_estimate_match_counting_comm():
+    """Plan.cost() equals the measured CountingComm rounds/bytes of a full
+    compiled private forward, and Plan.estimate() is exactly
+    latency_model over that measured cost (LAN/WAN presets)."""
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.configs import RESNET_SMOKE
+    from repro.core import MPCTensor
+    from repro.core.hummingbird import HBConfig, HBLayer
+    from repro.models import resnet
+
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+    x = jnp.zeros((1, 3, 8, 8))
+
+    def afn(p, v, relu_fn=None):
+        return resnet.apply(p, v, RESNET_SMOKE, relu_fn=relu_fn)
+
+    plan = api.trace_plan(afn, params, x.shape)
+    hb = HBConfig(tuple([HBLayer(k=21, m=13)] * (plan.n_groups - 1)
+                        + [HBLayer(k=13, m=13)]), plan.group_elements)
+    plan = plan.with_hb(hb)
+
+    cm = comm_lib.CountingComm()
+    model = api.compile(afn, params, RESNET_SMOKE, plan,
+                        api.Session(comm=cm))
+    model(MPCTensor.from_plain(jax.random.PRNGKey(1), x))
+
+    assert cm.n_swaps == plan.cost().rounds
+    assert cm.bytes_tx == plan.cost().bytes_tx
+    measured = costmodel.CommCost(cm.bytes_tx, cm.n_swaps, {})
+    for net in (api.LAN, api.WAN):
+        want = costmodel.latency_model(measured, net.bandwidth_bps, net.rtt_s)
+        assert plan.estimate(network=net) == want
+        assert plan.estimate(net.bandwidth_bps, net.rtt_s) == want
+
+
 def test_relu_many_cost_mixed_widths():
     specs = [(100, 64), (200, 8), (50, 0)]
     fused = costmodel.relu_many_cost(specs)

@@ -62,6 +62,63 @@ def test_budget_search_respects_budget(setup):
     assert res.nodes_visited > 0
 
 
+def test_simulated_relu_width0_is_identity(rng):
+    x = jnp.asarray(rng.uniform(-4, 4, (64,)).astype(np.float32))
+    out = simulated_hb_relu(x, 13, 13, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_budget_search_accepts_plan_and_can_cull(setup):
+    """A Plan flows in, the found config flows out attached to the plan;
+    width 0 (ReLU culling) is a legal bit choice."""
+    from repro import api
+
+    afn, params, xs, ys, groups = setup
+    plan = api.trace_plan(afn, params, (4, 3, 16, 16))
+    assert list(plan.group_elements) == [g * 4 for g in groups]
+    res = search_budget(afn, params, xs, ys, plan, jax.random.PRNGKey(7),
+                        budget=6 / 64, bit_choices=(0, 5, 6))
+    assert res.plan is not None
+    assert res.plan.hb == res.config
+    assert res.config.meets_budget(6 / 64)
+    # culled groups (if any) must be width 0, priced at zero comm
+    for layer in res.config.layers:
+        assert layer.width == 0 or layer.width in (5, 6)
+
+
+def test_eco_search_accepts_plan(setup):
+    from repro import api
+
+    afn, params, xs, ys, groups = setup
+    plan = api.trace_plan(afn, params, (2, 3, 16, 16))
+    res = search_eco(afn, params, xs, ys, plan, jax.random.PRNGKey(8))
+    assert res.plan is not None and res.plan.hb == res.config
+    assert res.plan.cost().bytes_tx > 0
+
+
+def test_budget_fallback_respects_max_k(setup):
+    """When nothing meets budget+threshold the fallback config must stay
+    inside the searched k-range (regression: it hard-coded k=width+13)."""
+    afn, params, xs, ys, groups = setup
+    max_k = 16
+    # impossible threshold: every candidate is pruned by Early stop 1
+    res = search_budget(afn, params, xs, ys, groups, jax.random.PRNGKey(9),
+                        budget=8 / 64, bit_choices=(0, 4),
+                        acc_threshold_drop=-2.0, max_k=max_k)
+    assert all(l.k <= max_k for l in res.config.layers)
+    assert all(l.width == 4 for l in res.config.layers)
+    # width choices beyond max_k clamp to it instead of escaping the range
+    res = search_budget(afn, params, xs, ys, groups, jax.random.PRNGKey(9),
+                        budget=8 / 64, bit_choices=(20,),
+                        acc_threshold_drop=-2.0, max_k=max_k)
+    assert all(l.k <= max_k for l in res.config.layers)
+    # only width 0 on offer: the fallback is the all-culled identity config
+    res = search_budget(afn, params, xs, ys, groups, jax.random.PRNGKey(9),
+                        budget=8 / 64, bit_choices=(0,),
+                        acc_threshold_drop=-2.0, max_k=max_k)
+    assert all(l.is_identity for l in res.config.layers)
+
+
 def test_finetune_runs_and_preserves_shapes(setup):
     afn, params, xs, ys, groups = setup
     cfg = HBConfig(tuple(HBLayer(k=19, m=13) for _ in groups), tuple(groups))
