@@ -5,7 +5,11 @@ Prints ``name,us_per_call,derived`` CSV rows.
 hot path — rounds, wire bytes and wall-clock for the exact (k=64, m=0) vs
 the 8-bit reduced ring, the round-fused engine vs the frozen seed path
 (core/gmw_ref.py), and the multi-group relu_many swap fusion — written to
-``BENCH_relu.json`` so the perf trajectory is tracked PR over PR.
+``BENCH_relu.json`` so the perf trajectory is tracked PR over PR.  Every
+measured entry sits next to the ``core.schedule`` prediction
+(``sched_rounds_pred`` / ``sched_bytes_pred`` plus LAN/WAN latency
+projections); ``--check`` is the CI round-regression gate that fails when
+measured fused swaps exceed the prediction.
 """
 import argparse
 import json
@@ -34,8 +38,9 @@ def quick(out_path: str = "BENCH_relu.json") -> dict:
     import jax
     import numpy as np
 
+    from repro.api.plan import LAN, WAN
     from repro.core import (beaver, comm as comm_lib, costmodel, fixed, gmw,
-                            gmw_ref, ring, shares)
+                            gmw_ref, ring, schedule as schedule_lib, shares)
 
     rng = np.random.default_rng(0)
     E = 2048
@@ -58,12 +63,15 @@ def quick(out_path: str = "BENCH_relu.json") -> dict:
         run(gmw_ref, comm_lib.SimComm())  # warmup
         wall_seed = _time_best(lambda: run(gmw_ref, comm_lib.SimComm()))
         model = costmodel.relu_cost(E, w)
+        sched = schedule_lib.simulate([(E, w, (E, k, m))])
         results["configs"][name] = {
             "k": k, "m": m, "width": w,
             "rounds": cm.n_swaps,
             "bytes_tx": cm.bytes_tx,
             "model_rounds": model.rounds,
             "model_bytes_tx": model.bytes_tx,
+            "sched_rounds_pred": sched.n_rounds,
+            "sched_bytes_pred": sched.bytes_tx,
             "wall_s_seed": round(wall_seed, 4),
             "wall_s_fused": round(wall_fused, 4),
             "speedup_vs_seed": round(wall_seed / max(wall_fused, 1e-9), 3),
@@ -95,6 +103,9 @@ def quick(out_path: str = "BENCH_relu.json") -> dict:
     run_fused(fused_cc)
     wall_seed = _time_best(lambda: run_seed(comm_lib.SimComm()))
     wall_fused = _time_best(lambda: run_fused(comm_lib.SimComm()))
+    # schedule-predicted fused timeline (the CI round-regression oracle:
+    # measured fused swaps must never exceed this — see --check)
+    sched = schedule_lib.simulate([(n, k - m, (n, k, m)) for n, k, m in specs])
     results["multigroup"] = {
         "groups": [{"n": n, "k": k, "m": m} for n, k, m in specs],
         "swaps_seed": seed_cm.n_swaps,
@@ -102,6 +113,12 @@ def quick(out_path: str = "BENCH_relu.json") -> dict:
         "swap_reduction": round(seed_cm.n_swaps / max(fused_cc.n_rounds, 1), 2),
         "bytes_seed": seed_cm.bytes_tx,
         "bytes_fused": fused_cc.bytes_tx,
+        "sched_rounds_pred": sched.n_rounds,
+        "sched_bytes_pred": sched.bytes_tx,
+        "sched_latency_lan_ms_pred": round(
+            sched.latency(LAN.bandwidth_bps, LAN.rtt_s) * 1e3, 3),
+        "sched_latency_wan_s_pred": round(
+            sched.latency(WAN.bandwidth_bps, WAN.rtt_s), 4),
         "wall_s_seed": round(wall_seed, 4),
         "wall_s_fused": round(wall_fused, 4),
         "speedup_vs_seed": round(wall_seed / max(wall_fused, 1e-9), 3),
@@ -112,18 +129,59 @@ def quick(out_path: str = "BENCH_relu.json") -> dict:
     return results
 
 
+def check(path: str = "BENCH_relu.json") -> int:
+    """Round-regression gate: fail (non-zero) when the measured fused
+    engine used MORE swaps than the round schedule predicts — i.e. the
+    engine stopped coalescing/batching the way ``core.schedule`` says it
+    should.  (Fewer is also a model bug, but the gate is one-sided so a
+    future engine improvement can land before its model update.)"""
+    with open(path) as f:
+        data = json.load(f)
+    failures = []
+    entries = [("multigroup", data.get("multigroup", {}), "swaps_fused")]
+    entries += [(name, c, "rounds")
+                for name, c in data.get("configs", {}).items()]
+    for name, entry, measured_key in entries:
+        measured = entry.get(measured_key)
+        pred = entry.get("sched_rounds_pred")
+        if measured is None or pred is None:
+            failures.append(
+                f"{name}: missing {measured_key!r}/'sched_rounds_pred' — "
+                f"stale BENCH file? regenerate with --quick")
+        elif measured > pred:
+            failures.append(
+                f"{name}: measured {measured} {measured_key} > "
+                f"schedule-predicted {pred}")
+    mg = data.get("multigroup", {})
+    if failures:
+        for msg in failures:
+            print(f"ROUND-REGRESSION: {msg}", file=sys.stderr)
+        return 1
+    print(f"round gate OK: multigroup swaps_fused={mg.get('swaps_fused')} "
+          f"<= sched_rounds_pred={mg.get('sched_rounds_pred')}")
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("filter", nargs="?", default=None,
                     help="only run benchmark modules whose name contains this")
     ap.add_argument("--quick", action="store_true",
                     help="CPU-sim ReLU perf tracker; writes BENCH_relu.json")
+    ap.add_argument("--check", action="store_true",
+                    help="round-regression gate over an existing "
+                         "BENCH_relu.json: exit 1 when measured fused swaps "
+                         "exceed the schedule prediction")
     ap.add_argument("--out", default="BENCH_relu.json",
-                    help="output path for --quick")
+                    help="output path for --quick / input for --check")
     args = ap.parse_args()
     if args.quick:
         quick(args.out)
+        if args.check:
+            sys.exit(check(args.out))
         return
+    if args.check:
+        sys.exit(check(args.out))
     from benchmarks import (bench_accuracy, bench_breakdown, bench_comm,
                             bench_e2e, bench_roofline, bench_search)
     mods = [bench_comm, bench_e2e, bench_breakdown, bench_search,

@@ -10,6 +10,8 @@ to save the searched plan as JSON and --plan-in to reuse it in a later run
     PYTHONPATH=src python examples/private_inference.py [--requests 16]
     PYTHONPATH=src python examples/private_inference.py --plan-out plan.json
     PYTHONPATH=src python examples/private_inference.py --plan-in plan.json
+    PYTHONPATH=src python examples/private_inference.py \
+        --objective latency --network wan
 """
 import argparse
 import dataclasses
@@ -35,6 +37,18 @@ def main():
                     help="save the searched Plan (JSON) here")
     ap.add_argument("--plan-in", type=str, default=None,
                     help="reuse a saved Plan instead of searching")
+    ap.add_argument("--objective", choices=("bytes", "latency"),
+                    default="bytes",
+                    help="what the search scores candidate configs by: "
+                         "'bytes' (total wire bytes, the paper's proxy) or "
+                         "'latency' (schedule-predicted fused-round latency "
+                         "under --network — what the round-dominated serving "
+                         "path actually pays; accuracy ties keep the "
+                         "latency-minimal config)")
+    ap.add_argument("--network", choices=("lan", "wan", "highbw"),
+                    default="wan",
+                    help="network preset for --objective latency "
+                         "(paper §5.2: WAN is where rounds dominate)")
     args = ap.parse_args()
 
     # --- setup: model + data -------------------------------------------------
@@ -75,13 +89,17 @@ def main():
               f"{[(l.k, l.m) for l in plan.hb.layers]} "
               f"({plan.hb.budget_fraction():.3f} of bits)")
     else:
-        print(f"[2/4] HummingBird-b search (budget {args.budget:.3f})...")
+        print(f"[2/4] HummingBird-b search (budget {args.budget:.3f}, "
+              f"objective {args.objective})...")
         res = search_budget(afn, params, xs[384:448], ys[384:448], plan,
                             jax.random.PRNGKey(3), budget=args.budget,
-                            bit_choices=(6, 8))
+                            bit_choices=(6, 8), objective=args.objective,
+                            network=args.network)
         plan = res.plan
+        unit = "B" if res.objective == "bytes" else "s"
         print(f"      found {[(l.k, l.m) for l in plan.hb.layers]} "
               f"({plan.hb.budget_fraction():.3f} of bits, "
+              f"{res.objective}={res.objective_value:.4g}{unit}, "
               f"{res.search_time_s:.1f}s)")
     if args.plan_out:
         plan.save(args.plan_out)
@@ -111,7 +129,9 @@ def main():
     print(f"      comm reduction vs CrypTen-64: {r['bytes_reduction']:.2f}x "
           f"bytes, {r['rounds_reduction']:.2f}x rounds, "
           f"{r['bits_discarded_frac']*100:.1f}% of DReLU bits discarded")
-    print(f"      plan estimate: {plan.cost().bytes_tx / 1e6:.1f} MB/party, "
+    sched = plan.schedule()
+    print(f"      plan schedule: {sched.n_rounds} fused rounds, "
+          f"{plan.cost().bytes_tx / 1e6:.1f} MB/party, "
           f"LAN {plan.estimate(network=api.LAN)*1e3:.1f} ms, "
           f"WAN {plan.estimate(network=api.WAN):.2f} s")
     print(f"      wall time (CPU sim, both parties): {wall:.1f}s")

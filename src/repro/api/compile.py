@@ -52,19 +52,23 @@ def resolve_mpc_forward(cfg) -> Callable:
 
 def compile(apply_fn, params, cfg, plan: Plan,
             session: Optional[Session] = None, *,
-            mpc_forward: Optional[Callable] = None) -> "PrivateModel":
+            mpc_forward: Optional[Callable] = None,
+            auto_batch: bool = True) -> "PrivateModel":
     """Bind a model to a Plan and a Session for private inference.
 
     ``apply_fn(params, x, relu_fn=...)`` is the plaintext forward (kept for
     reference evaluation; may be None).  ``cfg`` is the model config whose
     type resolves the registered MPC forward unless ``mpc_forward`` is
-    given explicitly.
+    given explicitly.  ``auto_batch`` controls whether identical sibling
+    streams merge into one batched protocol stream per ReLU call (the
+    serving default; ``plan.schedule``/``cost``/``estimate`` price
+    whichever mode is chosen).
     """
     if mpc_forward is None:
         mpc_forward = resolve_mpc_forward(cfg)
     return PrivateModel(apply_fn=apply_fn, params=params, cfg=cfg, plan=plan,
                         session=session if session is not None else Session(),
-                        mpc_forward=mpc_forward)
+                        mpc_forward=mpc_forward, auto_batch=auto_batch)
 
 
 @dataclasses.dataclass
@@ -84,6 +88,7 @@ class PrivateModel:
     plan: Plan
     session: Session
     mpc_forward: Callable
+    auto_batch: bool = True
 
     # -- convenience ----------------------------------------------------------
     def encrypt(self, key, x_f) -> MPCTensor:
@@ -96,7 +101,13 @@ class PrivateModel:
         return self.apply_fn(params if params is not None else self.params, x_f)
 
     def estimate(self, *args, **kwargs) -> float:
+        kwargs.setdefault("auto_batch", self.auto_batch)
         return self.plan.estimate(*args, **kwargs)
+
+    def schedule(self, streams: int = 1):
+        """Predicted fused-round timeline of one ``__call__`` replay with
+        ``streams`` sibling inputs (see ``Plan.schedule``)."""
+        return self.plan.schedule(streams=streams, auto_batch=self.auto_batch)
 
     # -- online phase ---------------------------------------------------------
     def __call__(self, xs: Union[MPCTensor, Sequence[MPCTensor]], *,
@@ -130,7 +141,7 @@ class PrivateModel:
                                  [hs[i] for i in live],
                                  comm=comm, hbs=[hb] * len(live),
                                  triples_list=[tris[i] for i in live],
-                                 cone=cone)
+                                 cone=cone, auto_batch=self.auto_batch)
                 for j, i in enumerate(live):
                     outs[i] = rets[j]
             return outs

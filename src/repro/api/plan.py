@@ -8,10 +8,13 @@ that works on any ``apply(params, x, relu_fn=...)`` model — and is
 JSON-(de)serializable so the offline search artifact can be saved, shipped,
 and reloaded across runs (``plan.save`` / ``Plan.load``).
 
-From a Plan alone you get the analytic communication cost (``plan.cost()``,
-validated bit-exactly against ``CountingComm`` in the comm-counter tests)
-and a latency estimate under the paper's evaluation networks
-(``plan.estimate(network=WAN)``, §5.2 projection methodology).
+From a Plan alone you get the predicted fused-round timeline of one
+replay (``plan.schedule()``, delegating to ``core.schedule`` — the
+simulator validated bit-exactly against ``CoalescingComm`` counters),
+the analytic communication cost (``plan.cost()``, validated against
+``CountingComm`` in the comm-counter tests) and a latency estimate under
+the paper's evaluation networks (``plan.estimate(network=WAN)``, §5.2
+projection methodology, priced per fused round).
 """
 from __future__ import annotations
 
@@ -23,7 +26,7 @@ from typing import Dict, List, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core import costmodel
+from repro.core import schedule as schedule_lib
 from repro.core.costmodel import CommCost
 from repro.core.hummingbird import HBConfig
 
@@ -102,33 +105,58 @@ class Plan:
                      for c in self.calls)
 
     # -- analytics ------------------------------------------------------------
-    def cost(self, streams: int = 1) -> CommCost:
-        """Closed-form ReLU communication of one replay of this plan.
+    def schedule(self, streams: int = 1,
+                 auto_batch: bool = True) -> schedule_lib.Schedule:
+        """Fused-round timeline of one replay of this plan: every ReLU
+        call is one ``relu_many`` lockstep (its ``streams`` sibling
+        payloads auto-batch into one stream by default, exactly as the
+        engine does); sequential calls never share rounds, so the
+        per-call schedules compose with ``+``.
 
-        ``streams`` > 1 prices the round-fused serving mode: sibling
-        streams share every protocol round via ``relu_many`` (bytes scale
-        with the stream count, rounds are paid once per call).
+        This is the single source of truth ``cost``/``estimate`` (and the
+        search engine's latency objective) read — per-round coalesced
+        bytes, cross-phase overlap and stream dropout included — and it
+        is validated bit-exactly against ``CoalescingComm`` counters.
 
         Trace-free plans (``Plan.from_hb``) carry no call list, so their
-        cost is unknown — raise rather than report a free model.
+        timeline is unknown — raise rather than report a free model.
         """
         if not self.calls and self.n_groups:
             raise ValueError(
                 "cost/estimate need a traced plan: this plan was built "
                 "without a call list (Plan.from_hb) — use trace_plan / "
                 "model-specific trace() to get one")
-        total = CommCost.zero()
+        total = schedule_lib.Schedule.empty()
         for c in self.calls:
-            w = self.hb.layers[c.group].width
-            total = total + costmodel.relu_many_cost(
-                [(c.n_elements, w)] * streams, cone=self.cone)
+            layer = self.hb.layers[c.group]
+            spec = (c.n_elements, layer.width, (c.n_elements, layer.k,
+                                                layer.m))
+            total = total + schedule_lib.simulate(
+                [spec] * streams, cone=self.cone, auto_batch=auto_batch)
         return total
+
+    def cost(self, streams: int = 1, auto_batch: bool = True) -> CommCost:
+        """Closed-form ReLU communication of one replay of this plan
+        (schedule-derived: ``self.schedule(...)`` collapsed to totals).
+
+        ``streams`` > 1 prices the round-fused serving mode: sibling
+        streams share every protocol round via ``relu_many`` and, being
+        identical, auto-batch into one payload per round (rounds are paid
+        once per call; bytes scale with the stream count minus the
+        packing padding batching removes).
+        """
+        sched = self.schedule(streams=streams, auto_batch=auto_batch)
+        return CommCost(sched.bytes_tx, sched.n_rounds, sched.phase_bytes())
 
     def estimate(self, bandwidth_bps: Optional[float] = None,
                  rtt_s: Optional[float] = None, *,
                  network: Union[NetworkPreset, str, None] = None,
-                 streams: int = 1, compute_s: float = 0.0) -> float:
-        """End-to-end ReLU latency estimate (seconds) for one replay.
+                 streams: int = 1, compute_s: float = 0.0,
+                 auto_batch: bool = True) -> float:
+        """End-to-end ReLU latency estimate (seconds) for one replay:
+        the schedule-predicted fused-round timeline priced per round (one
+        RTT each, serialization sharing the link) — what the serving path
+        actually pays, not a summed-bytes proxy.
 
         Pass explicit (bandwidth_bps, rtt_s) or one of the LAN/WAN/HIGHBW
         presets matching the paper's §5.2 evaluation setup.
@@ -138,8 +166,8 @@ class Plan:
             bandwidth_bps, rtt_s = preset.bandwidth_bps, preset.rtt_s
         if bandwidth_bps is None or rtt_s is None:
             raise ValueError("estimate needs (bandwidth_bps, rtt_s) or network=")
-        return costmodel.latency_model(self.cost(streams=streams),
-                                       bandwidth_bps, rtt_s, compute_s)
+        return self.schedule(streams=streams, auto_batch=auto_batch).latency(
+            bandwidth_bps, rtt_s, compute_s)
 
     # -- (de)serialization ----------------------------------------------------
     def to_json(self) -> Dict:

@@ -9,6 +9,9 @@ Layering:
                  repro.api.Session)
   comm         - party communicator (sim / mesh backends, counting +
                  coalescing wrappers for the round-fused engine)
+  schedule     - deterministic fused-round timeline simulator (single
+                 source of truth for rounds/bytes/latency; validated
+                 bit-exactly against CoalescingComm counters)
   gmw          - A2B, DReLU, B2A, ReLU (exact Eq.2 + reduced-ring Eq.3),
                  round-fused engine + relu_many round sharing
   gmw_ref      - frozen seed protocol (regression oracle / bench baseline)
@@ -18,12 +21,12 @@ Layering:
   mpc_tensor   - user-facing secret-shared tensor (+ relu_many)
 """
 from . import (beaver, comm, costmodel, fixed, gmw, gmw_ref, hummingbird,
-               ring, ring_linalg, shares)
+               ring, ring_linalg, schedule, shares)
 from .hummingbird import HBConfig, HBLayer, safe_k
 from .mpc_tensor import MPCTensor, encode_weights, relu_many
 
 __all__ = [
     "beaver", "comm", "costmodel", "fixed", "gmw", "gmw_ref", "hummingbird",
-    "ring", "ring_linalg", "shares", "HBConfig", "HBLayer", "safe_k",
-    "MPCTensor", "encode_weights", "relu_many",
+    "ring", "ring_linalg", "schedule", "shares", "HBConfig", "HBLayer",
+    "safe_k", "MPCTensor", "encode_weights", "relu_many",
 ]

@@ -9,13 +9,13 @@ both the sim backend and (party-sharded) into the mesh backend.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Iterable, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
-from . import ring, shares
+from . import ring, schedule as schedule_lib, shares
+from .schedule import n_levels  # noqa: F401  (canonical home: core.schedule)
 
 _U32 = jnp.uint32
 
@@ -104,10 +104,6 @@ class ReluTriples:
         return cls(*children)
 
 
-def n_levels(w: int) -> int:
-    return max(0, math.ceil(math.log2(w))) if w > 1 else 0
-
-
 def gen_relu_triples(key, n_elements: int, w: int, n_parties: int = 2,
                      cone: bool = False) -> ReluTriples:
     """cone=True sizes the AND triples to the MSB-cone-pruned circuit
@@ -116,8 +112,7 @@ def gen_relu_triples(key, n_elements: int, w: int, n_parties: int = 2,
     L = n_levels(w)
     k1, k2, k3, k4 = jax.random.split(key, 4)
     if cone and w > 1:
-        from . import gmw  # late: gmw imports beaver
-        init_pos, level_sets = gmw.cone_sets(w)
+        init_pos, level_sets = schedule_lib.cone_sets(w)
         bin_init = gen_bin(k1, (len(init_pos), W), n_parties)
         bin_levels = tuple(
             gen_bin(k, (2 * max(len(pos), 1), W), n_parties)
@@ -131,6 +126,51 @@ def gen_relu_triples(key, n_elements: int, w: int, n_parties: int = 2,
     b2a = gen_arith(k3, (n_elements,), n_parties)
     mult = gen_arith(k4, (n_elements,), n_parties)
     return ReluTriples(bin_init, bin_levels, b2a, mult)
+
+
+def concat_relu_triples(bundles: Sequence[ReluTriples],
+                        n_list: Sequence[int], w: int,
+                        cone: bool = False) -> ReluTriples:
+    """Merge per-stream ReluTriples (same ring width w) into one bundle
+    for the element-wise concatenation of the streams.
+
+    This is what lets ``gmw.relu_many`` auto-batch sibling streams of
+    identical (n_elements, k, m): arithmetic members concatenate on the
+    element axis; packed binary members are repacked at the *bit* level
+    (unpack each stream's words to its n_i element bits, concatenate,
+    pack) because word boundaries shift when n_i is not a multiple of 32.
+    Per-bit (a, b, c = a & b) relations and the XOR share split are
+    positional, so the merged words are valid triples for the combined
+    vector; tail padding bits pack to the trivially-valid all-zero triple.
+    """
+    if len(bundles) != len(n_list):
+        raise ValueError(f"concat_relu_triples: {len(bundles)} bundles vs "
+                         f"{len(n_list)} element counts")
+
+    def cat_bin(members: Sequence[BinTriple]) -> BinTriple:
+        def cat(field: str) -> jax.Array:
+            bits = [shares.unpack_bits(getattr(t, field), n)
+                    for t, n in zip(members, n_list)]
+            return shares.pack_bits(jnp.concatenate(bits, axis=-1))
+        return BinTriple(cat("a"), cat("b"), cat("c"))
+
+    def cat_arith(members: Sequence[ArithTriple]) -> ArithTriple:
+        def cat(field: str) -> ring.Ring64:
+            parts = [getattr(t, field) for t in members]
+            return ring.Ring64(
+                jnp.concatenate([p.lo for p in parts], axis=-1),
+                jnp.concatenate([p.hi for p in parts], axis=-1))
+        return ArithTriple(cat("a"), cat("b"), cat("c"))
+
+    if cone and w > 1:        # ragged per-level tuples, merged level-wise
+        bin_levels = tuple(
+            cat_bin([b.bin_levels[lvl] for b in bundles])
+            for lvl in range(len(bundles[0].bin_levels)))
+    else:                     # dense: (L, P, 2w, W) stacked — leading L rides
+        bin_levels = cat_bin([b.bin_levels for b in bundles])
+    return ReluTriples(cat_bin([b.bin_init for b in bundles]), bin_levels,
+                       cat_arith([b.b2a for b in bundles]),
+                       cat_arith([b.mult for b in bundles]))
 
 
 # ---------------------------------------------------------------------------

@@ -127,7 +127,11 @@ class CoalescingComm:
 
     Counters (read by tests, the quick benchmark, and the cost-model
     validation): ``n_rounds`` flushes fired, ``round_bytes`` per-party
-    one-direction bytes of each flush, ``bytes_tx`` their sum.
+    one-direction bytes of each flush, ``bytes_tx`` their sum, and
+    ``round_parts`` the number of payloads each flush coalesced — the
+    round-schedule simulator (``core.schedule``) predicts all three
+    sequences exactly, including the payload-count drop when
+    ``relu_many`` auto-batches identical sibling streams.
     """
 
     def __init__(self, base=None):
@@ -136,6 +140,7 @@ class CoalescingComm:
         self._queue: List[Tuple[List[jax.Array], Any]] = []
         self.n_rounds = 0
         self.round_bytes: List[int] = []
+        self.round_parts: List[int] = []
 
     @property
     def bytes_tx(self) -> int:
@@ -161,6 +166,7 @@ class CoalescingComm:
         buf = jnp.concatenate(flat, axis=1) if len(flat) > 1 else flat[0]
         self.n_rounds += 1
         self.round_bytes.append(payload_bytes(buf))
+        self.round_parts.append(len(queue))
         opened = self.base.swap(buf)
         results = []
         off = 0

@@ -7,18 +7,22 @@ reproduce the paper's Figure 3 / Figure 11 communication numbers.
 
 All byte counts are *per party per direction* (what one party transmits);
 with 2 parties, total wire traffic is 2x these numbers.
+
+Every cost here is derived from ``core.schedule`` — the deterministic
+round-timeline simulator of the fused engine — so rounds, per-round
+bytes and the per-phase breakdown all come from the same source of truth
+``CoalescingComm`` is validated against (``schedule`` is import-light and
+sits below the protocol modules, which also removes the historical
+costmodel -> gmw lazy-import cycle around ``cone_sets``).
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict
 
-from . import beaver, shares
+from . import schedule as schedule_lib
 from .hummingbird import HBConfig, RING_BITS
-
-WORD_BYTES = 4        # packed u32 wire words
-RING_BYTES = 8        # one Z/2^64 element
+from .schedule import RING_BYTES, WORD_BYTES  # noqa: F401  (re-export)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,41 +43,21 @@ class CommCost:
         return CommCost(0, 0, {})
 
 
+def _from_schedule(sched: schedule_lib.Schedule) -> CommCost:
+    return CommCost(sched.bytes_tx, sched.n_rounds, sched.phase_bytes())
+
+
 def relu_cost(n_elements: int, w: int = RING_BITS,
               cone: bool = False) -> CommCost:
     """One ReLU over n_elements with a w-bit DReLU ring (w = k - m).
 
-    w = 0 is the culled identity layer (HBLayer.is_identity): zero bytes,
-    zero rounds.  cone=True prices the MSB-cone-pruned adder (same rounds,
-    O(w) gates instead of O(w log w) — EXPERIMENTS.md §Perf iteration C2)."""
-    if w == 0:
-        return CommCost(0, 0, {"circuit": 0, "others": 0, "b2a": 0, "mult": 0})
-    W = shares.packed_words(n_elements)
-    L = beaver.n_levels(w)
-    level_rounds = L
-    if w == 1:
-        init_and = level_ands = 0                  # MSB is p0 directly: no ANDs
-    elif cone:
-        from . import gmw
-        init_pos, level_sets = gmw.cone_sets(w)
-        init_and = 2 * len(init_pos) * W * WORD_BYTES
-        # the protocol skips levels whose cone slice is empty (e.g. the top
-        # level for w in {2, 3, 5, 9, ...}): no bytes AND no round for them
-        level_ands = sum(2 * (2 * len(pos)) * W * WORD_BYTES
-                         for pos in level_sets if pos)
-        level_rounds = sum(1 for pos in level_sets if pos)
-    else:
-        init_and = 2 * w * W * WORD_BYTES          # open (d, e) of initial AND
-        level_ands = L * 2 * (2 * w) * W * WORD_BYTES
-    prep = w * W * WORD_BYTES                      # A2B mask exchange ("Others")
-    circuit = init_and + level_ands
-    b2a = 2 * n_elements * RING_BYTES              # one Beaver mult on Z/2^64
-    mult = 2 * n_elements * RING_BYTES             # final x * DReLU(x)
-    total = prep + circuit + b2a + mult
-    rounds = 1 + (1 + level_rounds if w > 1 else 0) + 1 + 1
-    return CommCost(total, rounds, {
-        "circuit": circuit, "others": prep, "b2a": b2a, "mult": mult,
-    })
+    w = 0 is the culled identity layer (HBLayer.is_identity) and
+    n_elements = 0 the empty-batch stream: zero bytes, zero rounds.
+    cone=True prices the MSB-cone-pruned adder (same rounds except for
+    skipped empty cone levels, O(w) gates instead of O(w log w) —
+    EXPERIMENTS.md §Perf iteration C2).  Delegates to the round-schedule
+    simulator (``core.schedule.stream_timeline``)."""
+    return _from_schedule(schedule_lib.simulate([(n_elements, w)], cone=cone))
 
 
 def model_relu_cost(cfg: HBConfig) -> CommCost:
@@ -84,28 +68,30 @@ def model_relu_cost(cfg: HBConfig) -> CommCost:
     return total
 
 
-def relu_many_cost(specs, cone: bool = False) -> CommCost:
+def relu_many_cost(specs, cone: bool = False,
+                   auto_batch: bool = True) -> CommCost:
     """Round-fused cost of sibling ReLU groups evaluated by ``relu_many``.
 
-    specs: iterable of (n_elements, width).  Bytes add up (each group still
-    sends its own payload), but every protocol round is ONE coalesced
-    exchange across all groups, so rounds = max over groups — this is the
-    counter pair CoalescingComm reports and tests validate against.
+    specs: iterable of (n_elements, width) — or (n_elements, width,
+    batch_key) to control auto-batching exactly as the engine does (it
+    merges streams of identical (n_elements, k, m) into the batch
+    dimension; the default key is (n_elements, width)).  Distinct groups
+    each send their own payload per round but every round is ONE coalesced
+    exchange, so rounds = max over groups; auto-batched groups additionally
+    repack into one payload, which can only shrink bytes.  This is the
+    counter pair CoalescingComm reports and tests validate against —
+    delegates to ``core.schedule.simulate``.
     """
-    costs = [relu_cost(n, w, cone=cone) for n, w in specs]
-    total = CommCost.zero()
-    for c in costs:
-        total = total + c
-    return CommCost(total.bytes_tx,
-                    max((c.rounds for c in costs), default=0),
-                    total.breakdown)
+    return _from_schedule(
+        schedule_lib.simulate(specs, cone=cone, auto_batch=auto_batch))
 
 
 def fused_model_relu_cost(cfg: HBConfig, streams: int,
                           cone: bool = False) -> CommCost:
     """Model-level round-fused cost: `streams` sibling inference streams
-    evaluated by relu_many at every ReLU layer.  Bytes scale with the
-    stream count; rounds are paid once per layer for all streams."""
+    evaluated by relu_many at every ReLU layer.  Identical sibling
+    streams auto-batch, so per layer the engine runs one batched stream
+    of ``streams * n`` elements; rounds are paid once per layer."""
     total = CommCost.zero()
     for layer, n in zip(cfg.layers, cfg.group_elements):
         total = total + relu_many_cost([(n, layer.width)] * streams,

@@ -46,7 +46,8 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import beaver, comm as comm_lib, ring, shares
+from . import beaver, comm as comm_lib, ring, schedule as schedule_lib, shares
+from .schedule import cone_sets  # noqa: F401  (canonical home: core.schedule)
 
 _U32 = jnp.uint32
 
@@ -127,25 +128,6 @@ def and_open(x, y, triple: beaver.BinTriple, comm) -> jax.Array:
 # ---------------------------------------------------------------------------
 # Kogge-Stone adder over packed bitplanes -> MSB (sign) of x + y mod 2^w
 # ---------------------------------------------------------------------------
-
-def cone_sets(w: int):
-    """Backward cone of the single output G[w-2] through the Kogge-Stone
-    levels (beyond-paper optimization: DReLU consumes only the MSB carry,
-    so prefix positions outside the cone are dead code).
-
-    Returns (init_positions, [(level_update_positions), ...]) with one
-    entry per level; total AND gates ~ 2(w-1) instead of w(1+2*log2 w).
-    """
-    L = beaver.n_levels(w)
-    needed = {w - 2}
-    level_sets = []
-    for lvl in reversed(range(L)):
-        d = 1 << lvl
-        level_sets.append(sorted(i for i in needed if i - d >= 0))
-        needed = needed | {i - d for i in needed if i - d >= 0}
-    level_sets.reverse()
-    return sorted(needed), level_sets
-
 
 def _adder_msb_rounds(xw, yw, triples: beaver.ReluTriples, comm, w: int,
                       cone: bool):
@@ -347,15 +329,29 @@ def relu(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
 
 def relu_many(keys, xs: Sequence[ring.Ring64],
               triples_list: Sequence[Optional[beaver.ReluTriples]], comm,
-              kms: Sequence[Tuple[int, int]],
-              cone: bool = False) -> List[ring.Ring64]:
+              kms: Sequence[Tuple[int, int]], cone: bool = False,
+              auto_batch: bool = True) -> List[ring.Ring64]:
     """Round-shared evaluation of N concurrent ReLU groups.
 
     Each group may have its own element count and reduced ring (k, m);
     every protocol round across all groups is ONE coalesced exchange, so
     total rounds = max over groups (vs. the sum when evaluated serially)
     with unchanged total bytes.  Width-0 groups (k == m) are the culled
-    identity and cost nothing.  Returns per-group Ring64 results in order.
+    identity and zero-element groups the empty batch: both cost nothing.
+
+    With ``auto_batch`` (default), sibling groups of identical
+    (n_elements, k, m) are merged into ONE stream on the element axis
+    before coalescing — one payload and one fused kernel pass per round
+    instead of N, with the combined element vector repacked so per-group
+    packing padding disappears (bytes can only drop).  Their Beaver
+    triples are merged bit-exactly (``beaver.concat_relu_triples``); the
+    protocol randomness comes from the first member's key, so *revealed*
+    outputs are unchanged (the protocol's internal masks never affect the
+    reconstruction) while output share splits differ from per-group
+    evaluation.  Ragged groups keep per-payload coalescing.  The timeline
+    either way is exactly ``core.schedule.simulate``'s prediction.
+
+    Returns per-group Ring64 results in order.
     """
     if not (len(keys) == len(xs) == len(triples_list) == len(kms)):
         raise ValueError(
@@ -364,22 +360,44 @@ def relu_many(keys, xs: Sequence[ring.Ring64],
     cc = (comm if isinstance(comm, comm_lib.CoalescingComm)
           else comm_lib.CoalescingComm(comm))
     results: List[Optional[ring.Ring64]] = [None] * len(xs)
-    streams, order = [], []
+    groups: dict = {}                     # batch key -> [(i, key, x, tri)]
     for i, (key, x, tr, (k, m)) in enumerate(
             zip(keys, xs, triples_list, kms)):
-        if k == m:                       # ReLU culled to identity
+        n = x.shape[-1]
+        if k == m or n == 0:             # culled identity / empty batch
             results[i] = x
             continue
-        streams.append(relu_rounds(key, x, tr, cc, k=k, m=m, cone=cone))
-        order.append(i)
-    for j, out in enumerate(run_streams(cc, streams)):
-        results[order[j]] = out
+        bkey = (n, k, m) if auto_batch else i
+        groups.setdefault(bkey, []).append((i, key, x, tr, k, m))
+    streams, placements = [], []
+    for members in groups.values():
+        i0, key0, x0, tr0, k, m = members[0]
+        if len(members) == 1:
+            streams.append(relu_rounds(key0, x0, tr0, cc, k=k, m=m,
+                                       cone=cone))
+            placements.append([(i0, 0, x0.shape[-1])])
+            continue
+        n = x0.shape[-1]
+        xcat = ring.Ring64(
+            jnp.concatenate([e[2].lo for e in members], axis=-1),
+            jnp.concatenate([e[2].hi for e in members], axis=-1))
+        tcat = beaver.concat_relu_triples([e[3] for e in members],
+                                          [n] * len(members), k - m,
+                                          cone=cone)
+        streams.append(relu_rounds(key0, xcat, tcat, cc, k=k, m=m,
+                                   cone=cone))
+        placements.append([(e[0], j * n, n) for j, e in enumerate(members)])
+    for slices, out in zip(placements, run_streams(cc, streams)):
+        if len(slices) == 1:
+            results[slices[0][0]] = out
+        else:
+            for i, off, n in slices:
+                results[i] = out[..., off:off + n]
     return results
 
 
 def n_rounds(w: int) -> int:
     """Communication rounds for one ReLU: prep + init-AND + levels + B2A +
-    mult; 0 for a culled (width-0) identity layer."""
-    if w == 0:
-        return 0
-    return 3 + (1 + beaver.n_levels(w) if w > 1 else 0)
+    mult; 0 for a culled (width-0) identity layer.  Delegates to the
+    round-schedule simulator (``core.schedule``)."""
+    return schedule_lib.stream_rounds(w)

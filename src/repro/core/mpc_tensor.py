@@ -157,15 +157,19 @@ class MPCTensor:
 def relu_many(keys, tensors: Sequence["MPCTensor"], comm=None,
               hbs: Optional[Sequence[HBLayer]] = None,
               triples_list: Optional[Sequence] = None,
-              cone: bool = False) -> list:
+              cone: bool = False, auto_batch: bool = True) -> list:
     """Round-shared GMW ReLU over sibling MPCTensors.
 
     All tensors advance through the protocol in lockstep; each round's
     payloads are coalesced into ONE exchange (comm.CoalescingComm), so the
     layer pays max-over-groups rounds instead of the per-tensor sum, with
-    unchanged total bytes.  `keys[i]` is consumed exactly like
-    ``tensors[i].relu(keys[i], ...)`` would, so outputs are bit-identical
-    to per-tensor evaluation.  Identity (width-0) layers pass through.
+    no byte increase.  `keys[i]` is consumed exactly like
+    ``tensors[i].relu(keys[i], ...)`` would, so ragged groups stay
+    bit-identical to per-tensor evaluation.  With ``auto_batch`` (default)
+    sibling tensors of identical (element count, k, m) are additionally
+    merged into one batched protocol stream (see ``gmw.relu_many``) —
+    revealed values unchanged, one payload per round instead of N.
+    Identity (width-0) layers and empty tensors pass through.
     """
     comm = comm or comm_lib.SimComm()
     n_t = len(tensors)
@@ -195,7 +199,8 @@ def relu_many(keys, tensors: Sequence["MPCTensor"], comm=None,
         tris.append(tri)
         kms.append((hb.k, hb.m))
         order.append(i)
-    rets = gmw.relu_many(run_keys, flats, tris, comm, kms, cone=cone)
+    rets = gmw.relu_many(run_keys, flats, tris, comm, kms, cone=cone,
+                         auto_batch=auto_batch)
     for j, i in enumerate(order):
         t = tensors[i]
         data = rets[j].reshape((t.data.shape[0],) + tuple(t.shape))

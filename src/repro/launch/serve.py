@@ -89,6 +89,41 @@ def make_mpc_serve_step(rcfg: ResNetConfig, hb: Optional[HBConfig],
     return model.serve_step()
 
 
+def _triple_pool_shardings(pool, mesh, party_axis: str):
+    """Party-dim shardings for an offline triple pool, derived from the
+    ``ReluTriples`` *structure* itself (one bundle or None per ReLU call,
+    see ``Plan.triple_specs``/``beaver.gen_plan_triples``).
+
+    The party dimension's position is fixed by construction: leading for
+    ``bin_init``, the arithmetic members and cone-mode per-level bin
+    triples; second (behind the stacked L axis) for dense ``bin_levels``.
+    Dense vs cone is a structural property too (one stacked ``BinTriple``
+    vs a per-level tuple), so nothing here guesses from pytree-path
+    strings or from ``shape[dim] == 2`` — a 2-element group or a 2-wide
+    plane axis can no longer be mistaken for the party dim (the historical
+    bug this replaces).
+    """
+    def at(party_dim: int):
+        def shard(leaf):
+            spec = [None] * len(leaf.shape)
+            spec[party_dim] = party_axis
+            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                        sharding=NamedSharding(mesh, P(*spec)))
+        return lambda tree: jax.tree_util.tree_map(shard, tree)
+
+    def bundle_shardings(bundle):
+        if bundle is None:               # culled / empty call: no triples
+            return None
+        if isinstance(bundle.bin_levels, beaver.BinTriple):
+            levels = at(1)(bundle.bin_levels)       # dense: (L, P, 2w, W)
+        else:                                       # cone: ragged per level
+            levels = tuple(at(0)(t) for t in bundle.bin_levels)
+        return beaver.ReluTriples(at(0)(bundle.bin_init), levels,
+                                  at(0)(bundle.b2a), at(0)(bundle.mult))
+
+    return [bundle_shardings(b) for b in pool]
+
+
 def mpc_input_specs(rcfg: ResNetConfig, batch: int, mesh,
                     hb: Optional[HBConfig], cone: bool = False):
     """ShapeDtypeStructs for the MPC dry-run (no allocation)."""
@@ -110,18 +145,6 @@ def mpc_input_specs(rcfg: ResNetConfig, batch: int, mesh,
     triples = jax.eval_shape(
         lambda k: beaver.gen_plan_triples(k, plan.triple_specs(), cone=cone),
         jax.ShapeDtypeStruct((2,), jnp.uint32))
-
-    def triple_sharding(path, leaf):
-        # party dim is axis 0 except bin_levels members (stacked L first)
-        path_str = "/".join(str(getattr(p, "key", getattr(p, "name", p)))
-                            for p in path)
-        party_dim = 1 if "bin_levels" in path_str else 0
-        spec = [None] * len(leaf.shape)
-        if len(leaf.shape) > party_dim and leaf.shape[party_dim] == 2:
-            spec[party_dim] = party_axis
-        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
-                                    sharding=NamedSharding(mesh, P(*spec)))
-
-    triples = jax.tree_util.tree_map_with_path(triple_sharding, triples)
+    triples = _triple_pool_shardings(triples, mesh, party_axis)
     key = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rep)
     return params, lo, hi, triples, key

@@ -128,16 +128,19 @@ def mlp(params, x, act_name: str = "gelu"):
 # ---------------------------------------------------------------------------
 
 def mpc_relu_many(keys, tensors, hbs=None, comm=None, triples_list=None,
-                  cone: bool = False):
+                  cone: bool = False, auto_batch: bool = True):
     """Apply GMW ReLU to sibling MPCTensors with shared protocol rounds.
 
     The single import point models use for round-fused private inference:
     every communication round across the sibling group becomes one
     coalesced exchange (see core.mpc_tensor.relu_many / core.comm
     CoalescingComm), so N parallel branches pay max-of-N rounds, not the
-    sum.  `keys` is one PRNG key per tensor; `hbs` one HummingBird
-    (k, m) spec per tensor (defaults to the exact 64-bit ring).
+    sum — and identical-(shape, k, m) branches auto-batch into one
+    protocol stream per round.  `keys` is one PRNG key per tensor; `hbs`
+    one HummingBird (k, m) spec per tensor (defaults to the exact 64-bit
+    ring).
     """
     from repro.core import mpc_tensor  # lazy: keep the plaintext substrate light
     return mpc_tensor.relu_many(keys, tensors, comm=comm, hbs=hbs,
-                                triples_list=triples_list, cone=cone)
+                                triples_list=triples_list, cone=cone,
+                                auto_batch=auto_batch)

@@ -12,17 +12,28 @@ HummingBird-b: DFS over per-group bit assignments with
   - Early stop 1: optimistic accuracy below the absolute threshold;
   - Early stop 2: optimistic accuracy below the best complete config;
   - Early stop 3: budget exceeded (bits weighted by group element counts).
+
+Scheduling-aware objective: serving latency is round-dominated, not
+byte-dominated (paper Fig. 3/4), so ``objective="latency"`` scores
+candidate configs by the schedule-predicted fused-round latency of the
+plan replay under a LAN/WAN ``network`` preset (``core.schedule`` via
+``simulator.config_objective``) instead of the byte-proxy bits budget
+alone.  Accuracy stays the primary criterion; among equally accurate
+configs the search keeps the objective-minimal one (Early stop 2 then
+prunes only strictly-worse branches so accuracy ties stay explorable),
+and the returned Plan's ``estimate()`` is exactly the metric that was
+optimized.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.plan import Plan
+from repro.api.plan import LAN, NETWORKS, NetworkPreset, Plan
 from repro.core.hummingbird import HBConfig, HBLayer, RING_BITS, safe_k
 from . import simulator
 
@@ -37,6 +48,10 @@ class SearchResult:
     nodes_visited: int
     nodes_pruned: int
     plan: Optional[Plan] = None   # set when the search was given a Plan
+    objective: str = "bytes"      # what the search scored configs by
+    objective_value: Optional[float] = None   # schedule-predicted score of
+    # the returned config: total wire bytes, or fused-round latency (s)
+    # under the requested network preset
 
     def to_json(self) -> Dict:
         return {"config": self.config.to_json(),
@@ -46,6 +61,8 @@ class SearchResult:
                 "search_time_s": self.search_time_s,
                 "nodes_visited": self.nodes_visited,
                 "nodes_pruned": self.nodes_pruned,
+                "objective": self.objective,
+                "objective_value": self.objective_value,
                 "plan": self.plan.to_json() if self.plan is not None else None}
 
     @staticmethod
@@ -58,6 +75,9 @@ class SearchResult:
             search_time_s=float(d["search_time_s"]),
             nodes_visited=int(d["nodes_visited"]),
             nodes_pruned=int(d["nodes_pruned"]),
+            objective=str(d.get("objective", "bytes")),
+            objective_value=(float(d["objective_value"])
+                             if d.get("objective_value") is not None else None),
             plan=(Plan.from_json(d["plan"])
                   if d.get("plan") is not None else None))
 
@@ -80,16 +100,63 @@ def _result(cfg: HBConfig, plan: Optional[Plan], **kw) -> SearchResult:
                         **kw)
 
 
+def _objective_scorer(objective: str,
+                      network: Union[NetworkPreset, str, None],
+                      plan: Optional[Plan], group_elements: Sequence[int],
+                      streams: int, cone: Optional[bool]):
+    """Config -> schedule-predicted score under the chosen objective.
+
+    With a traced Plan the score replays the plan's actual ReLU call
+    sites (and, unless overridden, its adder mode — ``cone=None``
+    inherits ``plan.cone`` so the score equals what ``plan.estimate()``
+    replays); with raw group element counts each group degrades to one
+    pseudo-call.  ``network`` resolves a LAN/WAN/HIGHBW preset (default
+    LAN) for the latency objective and is ignored for bytes.
+    """
+    if objective not in ("bytes", "latency"):
+        raise ValueError(f"unknown objective {objective!r} "
+                         "(expected 'bytes' or 'latency')")
+    if cone is None:
+        cone = plan.cone if plan is not None else False
+    if plan is not None and plan.calls:
+        calls: List[Tuple[int, int]] = [(c.n_elements, c.group)
+                                        for c in plan.calls]
+    else:
+        calls = list(enumerate(group_elements))
+        calls = [(n, g) for g, n in calls]
+    if network is None:
+        network = LAN
+    preset = NETWORKS[network] if isinstance(network, str) else network
+
+    def score(cfg: HBConfig) -> float:
+        return simulator.config_objective(
+            cfg, calls, objective=objective,
+            bandwidth_bps=preset.bandwidth_bps, rtt_s=preset.rtt_s,
+            streams=streams, cone=cone)
+
+    return score
+
+
 def search_eco(apply_fn, params, xs, ys,
                group_elements: Union[Plan, Sequence[int]],
-               key, margin_bits: int = 1) -> SearchResult:
+               key, margin_bits: int = 1, *, objective: str = "bytes",
+               network: Union[NetworkPreset, str, None] = None,
+               streams: int = 1, cone: Optional[bool] = None) -> SearchResult:
     """Zero-error config: per-group smallest k whose validation *outputs*
     are bit-identical to the exact model (the paper's eco criterion), m=0.
 
     ``group_elements`` may be a ``repro.api.Plan`` (traced offline); the
-    result then carries ``plan.with_hb(found_config)`` ready to save."""
+    result then carries ``plan.with_hb(found_config)`` ready to save.
+
+    Eco's selection is objective-agnostic — the smallest zero-error k per
+    group minimizes bytes and rounds simultaneously — but ``objective``/
+    ``network``/``streams`` choose which schedule-predicted serving metric
+    ``result.objective_value`` reports (total wire bytes, or fused-round
+    latency in seconds under the preset)."""
     t0 = time.time()
     group_elements, plan = _groups_and_plan(group_elements)
+    score = _objective_scorer(objective, network, plan, group_elements,
+                              streams, cone)
     n_groups = len(group_elements)
     base_cfg = HBConfig.exact(group_elements)
     base_acc = _eval(apply_fn, params, xs, ys, base_cfg, key)
@@ -119,14 +186,18 @@ def search_eco(apply_fn, params, xs, ys,
     acc = _eval(apply_fn, params, xs, ys, cfg, key)
     return _result(cfg, plan, accuracy=acc, baseline_accuracy=base_acc,
                    search_time_s=time.time() - t0, nodes_visited=nodes,
-                   nodes_pruned=0)
+                   nodes_pruned=0, objective=objective,
+                   objective_value=score(cfg))
 
 
 def search_budget(apply_fn, params, xs, ys,
                   group_elements: Union[Plan, Sequence[int]],
                   key, budget: float, *, acc_threshold_drop: float = 0.10,
                   bit_choices: Optional[Sequence[int]] = None,
-                  max_k: int = 28) -> SearchResult:
+                  max_k: int = 28, objective: str = "bytes",
+                  network: Union[NetworkPreset, str, None] = None,
+                  streams: int = 1,
+                  cone: Optional[bool] = None) -> SearchResult:
     """HummingBird-b: budgeted DFS with locally-optimal (k, m).
 
     ``bit_choices`` may include 0: the group's ReLU is then *culled*
@@ -134,9 +205,23 @@ def search_budget(apply_fn, params, xs, ys,
     the `relu_many`-friendly choice the round-fused engine exploits).
     ``group_elements`` may be a ``repro.api.Plan``; the result then
     carries ``plan.with_hb(found_config)``.
+
+    ``objective="latency"`` scores complete configs by schedule-predicted
+    fused-round latency under ``network`` (LAN default; the paper's §5.2
+    WAN preset is where rounds dominate) for ``streams`` auto-batched
+    sibling streams: accuracy remains primary, but accuracy ties keep the
+    latency-minimal config, and Early stop 2 prunes only *strictly* worse
+    branches so ties stay explorable.  The bits budget (Early stop 3)
+    is unchanged — it is the paper's offline constraint; the objective
+    decides which config *within* the budget is returned, and
+    ``result.objective_value`` (= ``result.plan.estimate(network=...)``
+    for traced plans) reports exactly what was optimized.
     """
     t0 = time.time()
     group_elements, plan = _groups_and_plan(group_elements)
+    score = _objective_scorer(objective, network, plan, group_elements,
+                              streams, cone)
+    latency_ties = objective == "latency"
     n_groups = len(group_elements)
     elements = np.asarray(group_elements, np.float64)
     total_bits = RING_BITS * elements.sum()
@@ -145,7 +230,7 @@ def search_budget(apply_fn, params, xs, ys,
     threshold = base_acc - acc_threshold_drop
     bit_choices = sorted(bit_choices or (0, 4, 5, 6, 8, 10), reverse=True)
 
-    best: dict = {"acc": -1.0, "layers": None}
+    best: dict = {"acc": -1.0, "metric": float("inf"), "layers": None}
     stats = {"visited": 0, "pruned": 0}
 
     def local_best(prefix: List[HBLayer], g: int, width: int):
@@ -176,7 +261,13 @@ def search_budget(apply_fn, params, xs, ys,
             acc = _eval(apply_fn, params, xs, ys, cfg, key)
             if acc > best["acc"]:
                 best["acc"] = acc
+                best["metric"] = score(cfg) if latency_ties else None
                 best["layers"] = tuple(prefix)
+            elif latency_ties and acc == best["acc"]:
+                metric = score(cfg)    # lazily: ties only, never for bytes
+                if metric < best["metric"]:
+                    best["metric"] = metric
+                    best["layers"] = tuple(prefix)
             return
         for width in bit_choices:
             new_bits = bits_used + width * elements[g]
@@ -188,7 +279,11 @@ def search_budget(apply_fn, params, xs, ys,
             if opt_acc < threshold:            # Early stop 1
                 stats["pruned"] += 1
                 continue
-            if opt_acc <= best["acc"]:         # Early stop 2
+            # Early stop 2: for the latency objective, equal-accuracy
+            # branches stay open so the tie-break can pick the
+            # schedule-cheapest complete config
+            if (opt_acc < best["acc"] if latency_ties
+                    else opt_acc <= best["acc"]):
                 stats["pruned"] += 1
                 continue
             dfs(prefix + [layer], g + 1, new_bits)
@@ -227,4 +322,5 @@ def search_budget(apply_fn, params, xs, ys,
     return _result(cfg, plan, accuracy=best["acc"], baseline_accuracy=base_acc,
                    search_time_s=time.time() - t0,
                    nodes_visited=stats["visited"],
-                   nodes_pruned=stats["pruned"])
+                   nodes_pruned=stats["pruned"], objective=objective,
+                   objective_value=score(cfg))

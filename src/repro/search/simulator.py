@@ -68,6 +68,38 @@ def evaluate_accuracy(apply_fn, params, xs, ys, cfg: HBConfig, key,
     return correct / n
 
 
+def config_objective(cfg: HBConfig, calls: Sequence[Tuple[int, int]],
+                     objective: str = "bytes",
+                     bandwidth_bps: float = None, rtt_s: float = None,
+                     streams: int = 1, cone: bool = False) -> float:
+    """Schedule-predicted serving score of an HBConfig.
+
+    ``calls``: the replay's ReLU call sites as (n_elements, group) in call
+    order (``Plan.calls`` flattened; one pseudo-call per group when only
+    group element counts are known).  Each call is one ``relu_many``
+    lockstep whose ``streams`` sibling payloads auto-batch, exactly as the
+    serving path executes — so ``objective="latency"`` scores what the
+    replay actually pays (fused rounds * RTT + wire time under the given
+    network), while ``objective="bytes"`` scores total wire bytes.
+    """
+    from repro.core import schedule as schedule_lib
+
+    total = schedule_lib.Schedule.empty()
+    for n, g in calls:
+        layer = cfg.layers[g]
+        total = total + schedule_lib.simulate(
+            [(n, layer.width, (n, layer.k, layer.m))] * streams, cone=cone)
+    if objective == "bytes":
+        return float(total.bytes_tx)
+    if objective == "latency":
+        if bandwidth_bps is None or rtt_s is None:
+            raise ValueError(
+                "objective='latency' needs (bandwidth_bps, rtt_s)")
+        return total.latency(bandwidth_bps, rtt_s)
+    raise ValueError(f"unknown objective {objective!r} "
+                     "(expected 'bytes' or 'latency')")
+
+
 def max_activation_ints(apply_fn, params, xs, n_groups: int,
                         frac_bits: int = 16) -> List[int]:
     """Per-group max |round(x * 2^frac)| over the validation set — drives

@@ -1,0 +1,231 @@
+"""core.schedule: the round-schedule simulator must predict the fused
+engine's CoalescingComm counters *bit-exactly* — rounds, per-round
+coalesced bytes and per-round payload counts — across mixed widths,
+early-dropout narrow rings, width-0 culled groups, empty-batch streams,
+cone on/off and auto-batched identical groups; and the analytic layers
+(costmodel, Plan) must agree with it because they delegate to it."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (beaver, comm as comm_lib, costmodel, fixed, gmw,
+                        ring, schedule, shares)
+
+try:                                   # optional: property test only
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _make_group(n, k, m, cone, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-3.5, 3.5, n).astype(np.float32)
+    X = shares.share(jax.random.PRNGKey(seed), fixed.encode_np(x))
+    tri = (None if k == m or n == 0 else
+           beaver.gen_relu_triples(jax.random.PRNGKey(seed + 1), n, k - m,
+                                   cone=cone))
+    return X, tri
+
+
+def _run_and_compare(specs, cone=False, auto_batch=True, seed=0):
+    """Execute relu_many on a CoalescingComm and assert the schedule
+    predicts every counter sequence exactly.  Returns the outputs."""
+    keys, Xs, trs = [], [], []
+    for i, (n, k, m) in enumerate(specs):
+        X, tri = _make_group(n, k, m, cone, seed + 10 * i)
+        keys.append(jax.random.PRNGKey(seed + 1000 + i))
+        Xs.append(X)
+        trs.append(tri)
+    cc = comm_lib.CoalescingComm(comm_lib.SimComm())
+    outs = gmw.relu_many(keys, Xs, trs, cc, [(k, m) for _, k, m in specs],
+                         cone=cone, auto_batch=auto_batch)
+    sched = schedule.simulate([(n, k - m, (n, k, m)) for n, k, m in specs],
+                              cone=cone, auto_batch=auto_batch)
+    assert cc.n_rounds == sched.n_rounds
+    assert cc.round_bytes == list(sched.round_bytes)
+    assert cc.round_parts == list(sched.round_parts)
+    assert cc.bytes_tx == sched.bytes_tx
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Deterministic scenario coverage
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("specs,cone", [
+    # mixed widths: narrow rings drop out of the lockstep early
+    ([(96, 64, 0), (160, 21, 13), (64, 20, 14)], False),
+    ([(96, 64, 0), (160, 21, 13), (64, 20, 14)], True),
+    # w=1 (no adder rounds at all) next to a deep ring
+    ([(40, 2, 1), (40, 64, 0)], False),
+    # width-0 culled + empty-batch streams cost zero rounds
+    ([(64, 13, 13), (0, 21, 13), (32, 21, 13)], False),
+    # all culled/empty: the whole layer is free
+    ([(64, 13, 13), (0, 64, 0)], False),
+    # cone widths with an empty (skipped) Kogge-Stone level
+    ([(128, 5, 0), (128, 3, 0)], True),
+    # identical (n, k, m) groups: auto-batched into one stream
+    ([(50, 21, 13), (50, 21, 13), (30, 21, 13)], False),
+    ([(50, 21, 13), (50, 21, 13), (50, 21, 13)], True),
+    # same n and width but different (k, m): must NOT batch
+    ([(48, 21, 13), (48, 20, 12)], False),
+])
+def test_schedule_matches_coalescing_counters(specs, cone):
+    _run_and_compare(specs, cone=cone)
+
+
+def test_schedule_matches_counters_without_batching():
+    specs = [(50, 21, 13), (50, 21, 13), (30, 21, 13)]
+    outs_nb = _run_and_compare(specs, auto_batch=False, seed=3)
+    outs_b = _run_and_compare(specs, auto_batch=True, seed=3)
+    # batching may change output *shares* but never the revealed values
+    for a, b in zip(outs_nb, outs_b):
+        np.testing.assert_array_equal(
+            ring.to_uint64_np(shares.reconstruct(a)),
+            ring.to_uint64_np(shares.reconstruct(b)))
+
+
+# ---------------------------------------------------------------------------
+# Property tests: randomized heterogeneous group sets (hypothesis when
+# available, a seeded random sweep otherwise)
+# ---------------------------------------------------------------------------
+
+_KM_POOL = [(64, 0), (21, 13), (20, 14), (8, 0), (5, 3), (2, 1),
+            (13, 13)]                                  # incl. culled (13, 13)
+
+if HAVE_HYPOTHESIS:
+    _GROUP = st.tuples(
+        st.integers(min_value=0, max_value=80),        # n (0 = empty batch)
+        st.sampled_from(_KM_POOL),
+    )
+
+    @settings(max_examples=8, deadline=None)
+    @given(groups=st.lists(_GROUP, min_size=1, max_size=4),
+           cone=st.booleans(), auto_batch=st.booleans())
+    def test_schedule_property_random_groups(groups, cone, auto_batch):
+        specs = [(n, k, m) for n, (k, m) in groups]
+        _run_and_compare(specs, cone=cone, auto_batch=auto_batch, seed=7)
+
+
+@pytest.mark.parametrize("case_seed", [0, 1, 2, 3])
+def test_schedule_random_sweep(case_seed):
+    """Deterministic randomized sweep (runs with or without hypothesis):
+    2-4 groups with random element counts — duplicates make auto-batches,
+    zeros make empty streams, (13, 13) makes culled identities."""
+    rng = np.random.default_rng(100 + case_seed)
+    n_groups = int(rng.integers(2, 5))
+    specs = []
+    for _ in range(n_groups):
+        n = int(rng.choice([0, 1, 17, 32, 50, 50, 80]))
+        k, m = _KM_POOL[int(rng.integers(len(_KM_POOL)))]
+        specs.append((n, k, m))
+    cone = bool(case_seed % 2)
+    _run_and_compare(specs, cone=cone, auto_batch=True, seed=200 + case_seed)
+    _run_and_compare(specs, cone=cone, auto_batch=False, seed=200 + case_seed)
+
+
+# ---------------------------------------------------------------------------
+# Auto-batching semantics
+# ---------------------------------------------------------------------------
+
+def test_auto_batch_single_payload_and_fewer_bytes():
+    """N identical sibling streams become ONE payload per round, and
+    repacking the combined vector removes per-stream packing padding
+    (50 elements pack to 2 words each but 100 to 4, not 6)."""
+    specs = [(50, 21, 13)] * 3
+    nb = schedule.simulate([(n, k - m, (n, k, m)) for n, k, m in specs],
+                           auto_batch=False)
+    b = schedule.simulate([(n, k - m, (n, k, m)) for n, k, m in specs])
+    assert set(nb.round_parts) == {3} and set(b.round_parts) == {1}
+    assert b.n_rounds == nb.n_rounds
+    assert b.bytes_tx < nb.bytes_tx            # padding words disappeared
+    # and the engine agrees with both predictions
+    _run_and_compare(specs, auto_batch=False, seed=11)
+    _run_and_compare(specs, auto_batch=True, seed=11)
+
+
+def test_auto_batch_reveals_match_per_tensor_path():
+    """Batched evaluation reveals exactly what per-tensor .relu reveals
+    (protocol-internal randomness never affects the reconstruction)."""
+    from repro.core.hummingbird import HBLayer
+    from repro.core.mpc_tensor import MPCTensor, relu_many
+
+    rng = np.random.default_rng(5)
+    xs = [rng.uniform(-3, 3, (4, 6)).astype(np.float32) for _ in range(3)]
+    tensors = [MPCTensor.from_plain(jax.random.PRNGKey(20 + i),
+                                    jax.numpy.asarray(x))
+               for i, x in enumerate(xs)]
+    keys = [jax.random.PRNGKey(30 + i) for i in range(3)]
+    hbs = [HBLayer(k=21, m=13)] * 3
+    fused = relu_many(keys, tensors, hbs=hbs)
+    for t, key, hb, f in zip(tensors, keys, hbs, fused):
+        single = t.relu(key, hb=hb)
+        np.testing.assert_array_equal(f.reveal_np(), single.reveal_np())
+
+
+# ---------------------------------------------------------------------------
+# Cross-phase overlap + delegation (single source of truth)
+# ---------------------------------------------------------------------------
+
+def test_cross_phase_overlap_visible_in_slots():
+    """A shallow group's B2A/mult rides the deep group's adder rounds."""
+    sched = schedule.simulate([(64, 64, (64, 64, 0)), (64, 2, (64, 2, 1))])
+    overlapped = [s for s in sched.slots
+                  if "circuit" in s.phases and
+                  ("b2a" in s.phases or "mult" in s.phases)]
+    assert overlapped, "expected B2A/mult to overlap adder rounds"
+    assert sched.n_rounds == gmw.n_rounds(64)   # max over groups, not sum
+
+
+def test_costmodel_delegates_to_schedule():
+    for n, w, cone in [(96, 64, False), (128, 8, True), (64, 0, False),
+                       (0, 8, False), (7, 1, False)]:
+        c = costmodel.relu_cost(n, w, cone=cone)
+        s = schedule.simulate([(n, w)], cone=cone)
+        assert (c.rounds, c.bytes_tx) == (s.n_rounds, s.bytes_tx)
+        assert c.breakdown == s.phase_bytes()
+    many = costmodel.relu_many_cost([(100, 64), (200, 8), (50, 0)])
+    s = schedule.simulate([(100, 64), (200, 8), (50, 0)])
+    assert (many.rounds, many.bytes_tx) == (s.n_rounds, s.bytes_tx)
+
+
+def test_schedule_latency_equals_latency_model():
+    sched = schedule.simulate([(128, 8), (64, 64)])
+    cost = costmodel.CommCost(sched.bytes_tx, sched.n_rounds, {})
+    for bw, rtt in [(10e9 / 8, 50e-6), (352e6 / 8, 20e-3)]:
+        assert sched.latency(bw, rtt) == costmodel.latency_model(cost, bw,
+                                                                 rtt)
+
+
+def test_plan_cost_streams_matches_measured_replay():
+    """Acceptance: Plan.cost/estimate(streams=N) reflect the *actual*
+    auto-batched serving replay — validated against CountingComm."""
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.configs import RESNET_SMOKE
+    from repro.core import MPCTensor
+    from repro.core.hummingbird import HBConfig, HBLayer
+    from repro.models import resnet
+
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+    x = jnp.zeros((1, 3, 8, 8))
+
+    def afn(p, v, relu_fn=None):
+        return resnet.apply(p, v, RESNET_SMOKE, relu_fn=relu_fn)
+
+    plan = api.trace_plan(afn, params, x.shape)
+    hb = HBConfig(tuple([HBLayer(k=21, m=13)] * (plan.n_groups - 1)
+                        + [HBLayer(k=13, m=13)]), plan.group_elements)
+    plan = plan.with_hb(hb)
+    cm = comm_lib.CountingComm()
+    model = api.compile(afn, params, RESNET_SMOKE, plan,
+                        api.Session(comm=cm))
+    Xs = [MPCTensor.from_plain(jax.random.PRNGKey(1 + i), x)
+          for i in range(3)]
+    model(Xs)
+    assert cm.n_swaps == plan.cost(streams=3).rounds
+    assert cm.bytes_tx == plan.cost(streams=3).bytes_tx
+    sched = model.schedule(streams=3)
+    assert cm.round_bytes == list(sched.round_bytes)
