@@ -119,6 +119,60 @@ def test_budget_fallback_respects_max_k(setup):
     assert all(l.is_identity for l in res.config.layers)
 
 
+def test_latency_objective_never_worse_on_estimate(setup):
+    """Acceptance: the latency-objective search returns a Plan whose
+    schedule-predicted WAN estimate is <= the bytes-objective Plan's on
+    the same (ResNet) grouping — accuracy stays primary in both, but
+    accuracy ties keep the fused-round-cheapest config."""
+    from repro import api
+
+    afn, params, xs, ys, groups = setup
+    plan = api.trace_plan(afn, params, (2, 3, 16, 16))
+    kwargs = dict(budget=8 / 64, bit_choices=(0, 5, 6), max_k=12)
+    res_b = search_budget(afn, params, xs[:32], ys[:32], plan,
+                          jax.random.PRNGKey(11), **kwargs)
+    res_l = search_budget(afn, params, xs[:32], ys[:32], plan,
+                          jax.random.PRNGKey(11), objective="latency",
+                          network=api.WAN, **kwargs)
+    assert res_b.objective == "bytes"
+    assert res_l.objective == "latency"
+    est_l = res_l.plan.estimate(network=api.WAN)
+    est_b = res_b.plan.estimate(network=api.WAN)
+    assert est_l <= est_b
+    # the reported score IS the returned plan's estimate (what you
+    # optimize is what estimate() replays)
+    assert res_l.objective_value == est_l
+    assert res_b.objective_value == float(res_b.plan.cost().bytes_tx)
+    # both respect the paper's bits budget regardless of objective
+    assert res_l.config.meets_budget(8 / 64)
+
+
+def test_eco_reports_objective_value(setup):
+    import dataclasses
+
+    from repro import api
+
+    afn, params, xs, ys, groups = setup
+    plan = api.trace_plan(afn, params, (2, 3, 16, 16))
+    res = search_eco(afn, params, xs[:32], ys[:32], plan,
+                     jax.random.PRNGKey(12), objective="latency",
+                     network="wan")
+    assert res.objective == "latency"
+    assert res.objective_value == res.plan.estimate(network=api.WAN)
+    back = type(res).from_json(res.to_json())
+    assert back.objective == "latency"
+    assert back.objective_value == res.objective_value
+    # cone-traced plans inherit the plan's adder mode in the score, so the
+    # what-you-optimize == what-estimate-replays contract holds there too
+    cone_plan = dataclasses.replace(plan, cone=True)
+    res_c = search_eco(afn, params, xs[:32], ys[:32], cone_plan,
+                       jax.random.PRNGKey(12), objective="latency",
+                       network="wan")
+    assert res_c.plan.cone
+    assert res_c.objective_value == res_c.plan.estimate(network=api.WAN)
+    assert res_c.objective_value < res.objective_value  # fewer cone rounds
+
+
 def test_finetune_runs_and_preserves_shapes(setup):
     afn, params, xs, ys, groups = setup
     cfg = HBConfig(tuple(HBLayer(k=19, m=13) for _ in groups), tuple(groups))
