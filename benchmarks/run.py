@@ -25,6 +25,14 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 
+
+# the --quick / --gantt multi-group layer: four concurrent ReLU groups of
+# mixed widths and element counts, (n_elements, k, m) each
+_E = 2048
+MULTIGROUP_SPECS = [(_E, 64, 0), (_E, 21, 13), (_E // 2, 21, 13),
+                    (_E // 2, 20, 14)]
+
+
 def _time_best(fn, repeats: int = 3) -> float:
     best = float("inf")
     for _ in range(repeats):
@@ -78,7 +86,7 @@ def quick(out_path: str = "BENCH_relu.json") -> dict:
         }
 
     # multi-group layer: sibling ReLU groups sharing rounds via relu_many
-    specs = [(E, 64, 0), (E, 21, 13), (E // 2, 21, 13), (E // 2, 20, 14)]
+    specs = MULTIGROUP_SPECS
     keys = [jax.random.PRNGKey(40 + i) for i in range(len(specs))]
     Xs, trs = [], []
     for i, (n, k, m) in enumerate(specs):
@@ -106,7 +114,46 @@ def quick(out_path: str = "BENCH_relu.json") -> dict:
     # schedule-predicted fused timeline (the CI round-regression oracle:
     # measured fused swaps must never exceed this — see --check)
     sched = schedule_lib.simulate([(n, k - m, (n, k, m)) for n, k, m in specs])
+
+    # mesh-lowered census: the same fused replay inside shard_map over a
+    # party axis of size 2 must compile to exactly one collective-permute
+    # per fused round with the schedule's per-round payloads (--check
+    # fails on any divergence).  Needs >= 2 devices (forced on CPU above).
+    mesh_census = {"mesh_collective_permutes": None,
+                   "mesh_collective_bytes": None}
+    from repro.launch.mesh import mpc_serving_mesh
+    mesh = mpc_serving_mesh()
+    if mesh.shape["party"] == 2:   # smoke fallback has no real exchange
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.runtime.hlo_analyzer import collective_census
+
+        kms = [(k, m) for _, k, m in specs]
+
+        def replay(lo_list, hi_list, triples):
+            cc = comm_lib.CoalescingComm(comm_lib.MeshComm("party", 2))
+            xs = [ring.Ring64(lo, hi) for lo, hi in zip(lo_list, hi_list)]
+            outs = gmw.relu_many(keys, xs, triples, cc, kms)
+            return [o.lo for o in outs], [o.hi for o in outs]
+
+        party = P("party")
+        n_g = len(specs)
+        fused = shard_map(
+            replay, mesh=mesh,
+            in_specs=([party] * n_g, [party] * n_g,
+                      beaver.pool_party_specs(trs)),
+            out_specs=([party] * n_g, [party] * n_g), check_rep=False)
+        compiled = jax.jit(fused).lower(
+            [x.lo for x in Xs], [x.hi for x in Xs], trs).compile()
+        census = collective_census(compiled.as_text())
+        mesh_census = {
+            "mesh_collective_permutes": sum(c.count for c in census),
+            "mesh_collective_bytes": sum(c.bytes * c.count for c in census),
+        }
+
     results["multigroup"] = {
+        **mesh_census,
         "groups": [{"n": n, "k": k, "m": m} for n, k, m in specs],
         "swaps_seed": seed_cm.n_swaps,
         "swaps_fused": fused_cc.n_rounds,
@@ -134,7 +181,13 @@ def check(path: str = "BENCH_relu.json") -> int:
     engine used MORE swaps than the round schedule predicts — i.e. the
     engine stopped coalescing/batching the way ``core.schedule`` says it
     should.  (Fewer is also a model bug, but the gate is one-sided so a
-    future engine improvement can land before its model update.)"""
+    future engine improvement can land before its model update.)
+
+    When the BENCH file carries a mesh-lowered census (>= 2 devices at
+    --quick time), the gate is also two-sided on the compiled artifact:
+    the mesh replay's collective-permute count must EQUAL the schedule's
+    fused-round prediction and its summed payload bytes the predicted
+    wire bytes — the compiled HLO is the timeline, not an upper bound."""
     with open(path) as f:
         data = json.load(f)
     failures = []
@@ -153,13 +206,56 @@ def check(path: str = "BENCH_relu.json") -> int:
                 f"{name}: measured {measured} {measured_key} > "
                 f"schedule-predicted {pred}")
     mg = data.get("multigroup", {})
+    mesh_rounds = mg.get("mesh_collective_permutes")
+    mesh_bytes = mg.get("mesh_collective_bytes")
+    if mesh_rounds is not None:
+        if mesh_rounds != mg.get("sched_rounds_pred"):
+            failures.append(
+                f"multigroup: mesh-lowered HLO has {mesh_rounds} "
+                f"collective-permutes != schedule-predicted "
+                f"{mg.get('sched_rounds_pred')} fused rounds")
+        if mesh_bytes != mg.get("sched_bytes_pred"):
+            failures.append(
+                f"multigroup: mesh-lowered collective bytes {mesh_bytes} "
+                f"!= schedule-predicted {mg.get('sched_bytes_pred')}")
     if failures:
         for msg in failures:
             print(f"ROUND-REGRESSION: {msg}", file=sys.stderr)
         return 1
     print(f"round gate OK: multigroup swaps_fused={mg.get('swaps_fused')} "
-          f"<= sched_rounds_pred={mg.get('sched_rounds_pred')}")
+          f"<= sched_rounds_pred={mg.get('sched_rounds_pred')}"
+          + (f"; mesh HLO census {mesh_rounds} collective-permutes / "
+             f"{mesh_bytes} B == schedule" if mesh_rounds is not None
+             else " (no mesh census: single device)"))
     return 0
+
+
+def gantt() -> None:
+    """Print the fused-round Gantt of the --quick multi-group layer and
+    the per-layer Gantt of the smoke-model serving plan."""
+    from repro.core import schedule as schedule_lib
+
+    specs = MULTIGROUP_SPECS
+    sched = schedule_lib.simulate([(n, k - m, (n, k, m)) for n, k, m in specs])
+    print("multi-group relu_many layer "
+          f"({', '.join(f'{n}el k={k} m={m}' for n, k, m in specs)}):\n")
+    print(sched.gantt())
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import RESNET_SMOKE
+    from repro.core.hummingbird import HBConfig, HBLayer
+    from repro.models import resnet
+
+    params = jax.eval_shape(lambda k: resnet.init(k, RESNET_SMOKE),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    plan = resnet.trace(params, RESNET_SMOKE, batch=2)
+    hb = HBConfig(tuple([HBLayer(k=21, m=13)] * (plan.n_groups - 1)
+                        + [HBLayer(k=13, m=13)]), plan.group_elements)
+    print(f"\n\nper-layer replay of the {RESNET_SMOKE.name} serving plan "
+          "(last group culled):\n")
+    print(plan.with_hb(hb).gantt())
 
 
 def main() -> None:
@@ -172,16 +268,29 @@ def main() -> None:
                     help="round-regression gate over an existing "
                          "BENCH_relu.json: exit 1 when measured fused swaps "
                          "exceed the schedule prediction")
+    ap.add_argument("--gantt", action="store_true",
+                    help="print the fused-round Gantt of the --quick "
+                         "multi-group layer and the smoke serving plan")
     ap.add_argument("--out", default="BENCH_relu.json",
                     help="output path for --quick / input for --check")
     args = ap.parse_args()
+    if args.quick and ("--xla_force_host_platform_device_count"
+                       not in os.environ.get("XLA_FLAGS", "")):
+        # the --quick mesh-lowering census needs a party axis of size 2;
+        # force two host devices before the first jax init (quick-mode
+        # only — classic benchmarks keep the ambient topology; no effect
+        # on real accelerators)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=2")
+    if args.gantt:
+        gantt()
     if args.quick:
         quick(args.out)
-        if args.check:
-            sys.exit(check(args.out))
-        return
     if args.check:
         sys.exit(check(args.out))
+    if args.gantt or args.quick:
+        return
     from benchmarks import (bench_accuracy, bench_breakdown, bench_comm,
                             bench_e2e, bench_roofline, bench_search)
     mods = [bench_comm, bench_e2e, bench_breakdown, bench_search,

@@ -17,7 +17,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 
-from repro.core import beaver, ring
+from repro.core import beaver, comm as comm_lib, ring
 from repro.core.mpc_tensor import MPCTensor, relu_many
 from .plan import Plan
 from .session import Session
@@ -32,6 +32,16 @@ def register_mpc_forward(cfg_type: type, forward: Callable) -> None:
     model on a list of sibling MPCTensor streams, calling
     ``relu_fn(tensors, group)`` at every ReLU point (the Plan replay hooks
     in there).
+
+    Example::
+
+        def my_forward(params, hs, cfg, relu_fn, comm):
+            hs = [h.matmul_public(params["w1"]) for h in hs]
+            hs = relu_fn(hs, 0)                     # ReLU group 0
+            return [h.matmul_public(params["w2"]) for h in hs]
+
+        register_mpc_forward(MyConfig, my_forward)
+        # api.compile(..., cfg=MyConfig(...), ...) now resolves it
     """
     _MPC_FORWARDS[cfg_type] = forward
 
@@ -63,6 +73,13 @@ def compile(apply_fn, params, cfg, plan: Plan,
     streams merge into one batched protocol stream per ReLU call (the
     serving default; ``plan.schedule``/``cost``/``estimate`` price
     whichever mode is chosen).
+
+    Example::
+
+        model = api.compile(afn, params, RESNET_SMOKE, plan,
+                            api.Session(key=0))
+        X = model.encrypt(jax.random.PRNGKey(1), x)
+        logits = model(X).reveal()          # private inference
     """
     if mpc_forward is None:
         mpc_forward = resolve_mpc_forward(cfg)
@@ -79,7 +96,16 @@ class PrivateModel:
     streams share protocol rounds via ``relu_many`` (max-over-streams
     rounds per ReLU layer, one coalesced exchange per round).
     ``serve_step()`` lowers the same replay into a jit-able
-    ``step(params, lo, hi, triples, key)`` for the mesh backend.
+    ``step(params, lo, hi, triples, key)`` — mesh-native (one
+    collective-permute per fused round) when given a mesh with a party
+    axis.
+
+    Example::
+
+        model = api.compile(afn, params, cfg, plan, api.Session(key=0))
+        out = model(model.encrypt(key, x))          # one stream
+        outs = model([X1, X2, X3])                  # rounds shared 3-way
+        print(model.schedule(streams=3).gantt())    # predicted timeline
     """
 
     apply_fn: Optional[Callable]
@@ -149,22 +175,78 @@ class PrivateModel:
         return self.mpc_forward(params, tensors, self.cfg, _relu, comm)
 
     # -- mesh serving ---------------------------------------------------------
-    def serve_step(self) -> Callable:
+    def serve_step(self, mesh=None, *, party_axis: str = "party") -> Callable:
         """step(params, lo, hi, triples, key) -> (lo, hi) logits shares.
 
         ``lo``/``hi`` are the Ring64 limbs of the input shares, shape
-        (2, B, ...), party dim sharded over the mesh's party axis by the
-        caller's in_shardings; ``triples`` is the offline pool (one bundle
-        or None per ReLU call, see ``Plan.triple_specs``), entering as step
-        inputs so the TTP material is party-sharded too.  Protocol
-        exchanges run on the session's comm (``SimComm`` materialises the
-        party dim; XLA lowers each swap to a collective-permute).
+        (2, B, ...); ``triples`` is the offline pool (one bundle or None
+        per ReLU call, see ``Plan.triple_specs``), entering as step inputs
+        so the TTP material is party-sharded too.
+
+        With ``mesh=None`` (legacy path) the replay runs on the session's
+        comm with the party dimension materialised (``SimComm``) and the
+        caller's in_shardings *hope* XLA shards each exchange sensibly.
+
+        With a mesh carrying a ``party_axis``, the step is **mesh-native**:
+        the fused replay executes inside ``shard_map`` over the party axis
+        with ``CoalescingComm`` over a ``MeshComm`` base, so every fused
+        protocol round of the whole network lowers to exactly ONE
+        ``lax.ppermute`` of one flattened uint32 buffer — the compiled
+        HLO's collective-permute census equals ``plan.schedule()``'s
+        ``(n_rounds, round_bytes)`` prediction, collective for collective
+        (asserted in tests/test_mesh_serving.py via
+        ``runtime.hlo_analyzer.collective_census``).  The party axis may
+        have size 2 (one device slice per non-colluding server) or size 1
+        (``make_mpc_smoke_mesh``; both parties on one shard, exchanges
+        stay local).  The mesh path requires an explicit triple pool —
+        inline providers would have to conjure cross-party randomness
+        inside a single party's shard.
+
+        Example::
+
+            mesh = launch.mesh.make_mpc_mesh()        # (2, n_data)
+            step = jax.jit(model.serve_step(mesh))
+            lo, hi = step(params, X.data.lo, X.data.hi, pool, key)
         """
-        def step(params, lo, hi, triples, key):
+        if mesh is None:
+            def step(params, lo, hi, triples, key):
+                x = MPCTensor(ring.Ring64(lo, hi))
+                provider = (beaver.TriplePool(triples) if triples is not None
+                            else self.session.provider)
+                out = self._run([x], key, self.session.comm, provider,
+                                params)[0]
+                return out.data.lo, out.data.hi
+
+            return step
+
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+
+        if party_axis not in mesh.axis_names:
+            raise ValueError(
+                f"mesh axes {mesh.axis_names} carry no {party_axis!r} axis")
+        axis_size = mesh.shape[party_axis]
+
+        def _replay(params, lo, hi, triples, key):
+            comm = comm_lib.CoalescingComm(
+                comm_lib.MeshComm(party_axis, axis_size))
             x = MPCTensor(ring.Ring64(lo, hi))
-            provider = (beaver.TriplePool(triples) if triples is not None
-                        else self.session.provider)
-            out = self._run([x], key, self.session.comm, provider, params)[0]
+            out = self._run([x], key, comm, beaver.TriplePool(triples),
+                            params)[0]
             return out.data.lo, out.data.hi
+
+        def step(params, lo, hi, triples, key):
+            if triples is None:
+                raise ValueError(
+                    "mesh-native serve_step needs an offline triple pool "
+                    "(beaver.gen_plan_triples(key, plan.triple_specs()))")
+            party = PartitionSpec(party_axis)
+            rep = PartitionSpec()
+            fused = shard_map(
+                _replay, mesh=mesh,
+                in_specs=(rep, party, party,
+                          beaver.pool_party_specs(triples, party_axis), rep),
+                out_specs=(party, party), check_rep=False)
+            return fused(params, lo, hi, triples, key)
 
         return step

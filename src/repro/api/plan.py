@@ -76,6 +76,13 @@ class Plan:
     accounting.  ``calls`` may be empty for plans built directly from an
     ``HBConfig`` (``Plan.from_hb``) — execution only needs ``hb``/``cone``;
     cost estimation and offline triple generation need the trace.
+
+    Example::
+
+        plan = api.trace_plan(afn, params, (4, 3, 32, 32), name="resnet18")
+        plan = plan.with_hb(search_budget(..., plan, ...).config)
+        print(plan.cost().bytes_tx, plan.estimate(network=api.WAN))
+        plan.save("plan.json")            # == Plan.load("plan.json")
     """
 
     calls: Tuple[ReluCall, ...]
@@ -134,6 +141,43 @@ class Plan:
             total = total + schedule_lib.simulate(
                 [spec] * streams, cone=self.cone, auto_batch=auto_batch)
         return total
+
+    def gantt(self, streams: int = 1, auto_batch: bool = True) -> str:
+        """Per-layer ASCII/markdown Gantt of one replay: one timeline block
+        per ReLU call (sequential calls never share rounds), rendered by
+        ``core.schedule.Schedule.gantt`` — phases as rows, fused rounds as
+        columns, cross-phase overlap as stacked bars — plus a replay
+        total.  This is what ``benchmarks/run.py --gantt`` prints.
+
+        Example::
+
+            plan = api.trace_plan(afn, params, (2, 3, 8, 8))
+            print(plan.gantt(streams=4))
+        """
+        if not self.calls and self.n_groups:
+            raise ValueError(
+                "gantt needs a traced plan: this plan was built without a "
+                "call list (Plan.from_hb) — use trace_plan / model-specific "
+                "trace() to get one")
+        blocks: List[str] = []
+        total = schedule_lib.Schedule.empty()
+        for idx, c in enumerate(self.calls):
+            layer = self.hb.layers[c.group]
+            spec = (c.n_elements, layer.width,
+                    (c.n_elements, layer.k, layer.m))
+            sched = schedule_lib.simulate([spec] * streams, cone=self.cone,
+                                          auto_batch=auto_batch)
+            total = total + sched
+            head = (f"call {idx}: group {c.group}  k={layer.k} m={layer.m} "
+                    f"width={layer.width}  {c.n_elements} el"
+                    + (f" x {streams} streams" if streams > 1 else ""))
+            if not sched.slots:
+                blocks.append(f"{head}  — culled (0 rounds, 0 bytes)")
+                continue
+            blocks.append(head + "\n" + sched.gantt())
+        blocks.append(f"replay total: {total.n_rounds} fused rounds, "
+                      f"{total.bytes_tx} B/party one-direction")
+        return "\n\n".join(blocks)
 
     def cost(self, streams: int = 1, auto_batch: bool = True) -> CommCost:
         """Closed-form ReLU communication of one replay of this plan
@@ -206,6 +250,14 @@ def trace_plan(apply_fn, params, x, *, hb: Optional[HBConfig] = None,
     ShapeDtypeStruct pytree (dry-run).  ``relu_fn(v, g)`` call sites are
     recorded in call order; group element counts are accumulated per group,
     and ``hb`` defaults to the exact 64-bit assignment.
+
+    Example::
+
+        def afn(p, v, relu_fn=None):
+            return resnet.apply(p, v, RESNET18, relu_fn=relu_fn)
+
+        plan = api.trace_plan(afn, params, (4, 3, 32, 32), name="resnet18")
+        assert plan.n_groups == 5        # stem + 4 stages
     """
     if isinstance(x, (tuple, list)):
         x = jax.ShapeDtypeStruct(tuple(x), jnp.float32)

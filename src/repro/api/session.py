@@ -20,13 +20,23 @@ class Session:
     """Runtime context for private inference.
 
     - ``comm``: party communicator (default ``SimComm`` — single host,
-      party dim materialised; pass ``CountingComm`` to measure, or keep
-      ``SimComm`` under ``shard_map`` for the mesh backend).
+      party dim materialised; pass ``CountingComm`` to measure.  Mesh
+      serving does not read this: ``PrivateModel.serve_step(mesh)``
+      builds its own ``CoalescingComm`` over ``MeshComm`` inside
+      ``shard_map``).
     - ``key``: base PRNG key (or int seed) for per-request protocol keys;
       ``next_key()`` advances the stream.
     - ``provider``: ``beaver.TripleProvider`` (default ``InlineTTP`` —
       triples derived inline from each call's key, the sim behaviour that
       is bit-identical to the historical ``triples=None`` path).
+
+    Example::
+
+        session = api.Session(key=0)                    # sim defaults
+        model = api.compile(afn, params, cfg, plan, session)
+
+        counting = api.Session(comm=comm_lib.CountingComm())  # measure
+        pooled = api.Session(key=0).offline(ttp_key, plan, requests=16)
     """
 
     def __init__(self, key: Union[int, jax.Array, None] = None, comm=None,

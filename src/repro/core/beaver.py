@@ -173,6 +173,41 @@ def concat_relu_triples(bundles: Sequence[ReluTriples],
                        cat_arith([b.mult for b in bundles]))
 
 
+def pool_party_specs(pool: Sequence[Optional["ReluTriples"]],
+                     party_axis: str = "party") -> List:
+    """Party-dim ``PartitionSpec`` pytree for an offline triple pool.
+
+    The party dimension's position is fixed by each member's *structure*
+    (never guessed from pytree paths or ``shape[dim] == 2``): leading for
+    ``bin_init``, the arithmetic members and cone-mode per-level bin
+    triples; second (behind the stacked L axis) for dense ``bin_levels``.
+    The result mirrors the pool's pytree structure with one PartitionSpec
+    per leaf, so it drops straight into ``shard_map`` ``in_specs`` or maps
+    to ``NamedSharding``s for jit input specs (see
+    ``launch.serve.mpc_input_specs``).
+    """
+    from jax.sharding import PartitionSpec
+
+    def at(party_dim: int):
+        def spec(leaf):
+            s = [None] * len(leaf.shape)
+            s[party_dim] = party_axis
+            return PartitionSpec(*s)
+        return lambda tree: jax.tree_util.tree_map(spec, tree)
+
+    def bundle_specs(bundle):
+        if bundle is None:               # culled / empty call: no triples
+            return None
+        if isinstance(bundle.bin_levels, BinTriple):
+            levels = at(1)(bundle.bin_levels)       # dense: (L, P, 2w, W)
+        else:                                       # cone: ragged per level
+            levels = tuple(at(0)(t) for t in bundle.bin_levels)
+        return ReluTriples(at(0)(bundle.bin_init), levels,
+                           at(0)(bundle.b2a), at(0)(bundle.mult))
+
+    return [bundle_specs(b) for b in pool]
+
+
 # ---------------------------------------------------------------------------
 # Triple providers: who supplies the ReluTriples each protocol call consumes
 # ---------------------------------------------------------------------------
@@ -220,7 +255,13 @@ class StreamingTTP:
     """Per-request streaming TTP: each bundle is generated on demand from
     this provider's own PRNG stream at call time (no storage, but the
     triple material is independent of the protocol keys, as in a real
-    deployment where the TTP streams triples to the parties)."""
+    deployment where the TTP streams triples to the parties).
+
+    Example::
+
+        session = api.Session(key=0,
+                              provider=StreamingTTP(jax.random.PRNGKey(7)))
+    """
 
     def __init__(self, key):
         self._key = key
@@ -237,7 +278,13 @@ class TriplePool:
     """Precomputed pool consumed in call order (the mesh-serving path:
     bundles enter the jitted step as inputs).  ``bundles`` holds one entry
     per ReLU call per stream, call-major / stream-minor, with None for
-    culled or empty calls — the layout ``gen_plan_triples`` emits."""
+    culled or empty calls — the layout ``gen_plan_triples`` emits.
+
+    Example::
+
+        pool = gen_plan_triples(key_ttp, plan.triple_specs())
+        session = api.Session(provider=TriplePool(pool))
+    """
 
     def __init__(self, bundles: Iterable[Optional[ReluTriples]]):
         self._iter = iter(bundles)
@@ -266,6 +313,11 @@ class EagerTTP(TriplePool):
     Layout matches the replay's pop order (see TriplePool): within one
     replay, call-major / stream-minor — every ReLU call pops one bundle
     per sibling stream before the next call; replays follow sequentially.
+
+    Example::
+
+        ttp = EagerTTP(key_ttp, plan.triple_specs(), requests=16)
+        session = api.Session(key=0, provider=ttp)   # 16 replays covered
     """
 
     def __init__(self, key, specs: Sequence[Tuple[int, int]],

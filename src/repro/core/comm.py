@@ -10,7 +10,12 @@ shard, exchanges lower to collective-permute):
 - ``MeshComm``: used *inside* ``shard_map`` over the ``party`` mesh axis;
   ``swap`` is ``lax.ppermute`` so every protocol exchange shows up as a
   collective-permute in the compiled HLO (and therefore in the roofline's
-  collective-bytes term).
+  collective-bytes term).  A party axis of size 1 (smoke mesh) keeps both
+  party rows on one shard and degenerates to the local flip.
+
+Party-dependent randomness goes through ``party_is`` (boolean mask) and
+``party_slice`` (each party's rows of a full-party-dim array), so the
+same protocol code produces bit-identical values on both backends.
 
 Round-fused engine support (see core/gmw.py):
 
@@ -60,24 +65,74 @@ class SimComm:
         idx = jnp.arange(2).reshape((2,) + (1,) * (template.ndim - 1))
         return idx == p
 
+    def party_slice(self, full: jax.Array) -> jax.Array:
+        """Each party's view of a full-party-dim array (leading dim =
+        ``n_parties``).  The sim backend materialises every party, so this
+        is the identity; the mesh backend returns the local party shard.
+        Protocol code uses it for party-dependent randomness: generate the
+        full (P, ...) array from a shared key, then keep your own rows —
+        bit-identical across backends by construction."""
+        return full
+
 
 class MeshComm:
-    """Mesh backend, valid only inside shard_map over `axis_name`."""
+    """Mesh backend, valid only inside ``shard_map`` over ``axis_name``.
+
+    The *global* party dimension (size ``n_parties`` = 2) is split over a
+    mesh axis of size ``axis_size``, so each shard holds a local party dim
+    of ``n_parties // axis_size`` rows:
+
+    - ``axis_size == 2`` (real deployment: one device slice per
+      non-colluding server): local party dim 1; ``swap`` is a single
+      ``lax.ppermute``, so every protocol exchange is visible as exactly
+      one collective-permute in the compiled HLO.
+    - ``axis_size == 1`` (1-device smoke mesh): both parties land on the
+      same shard (local party dim 2); the exchange degenerates to the
+      sim backend's local flip and no collective is emitted.
+
+    Either way the global semantics are the party flip, so protocol code
+    is backend-agnostic and ``CoalescingComm`` over a ``MeshComm`` base
+    fires ONE flattened ppermute per fused round.
+    """
 
     n_parties = 2
 
-    def __init__(self, axis_name: str = "party"):
+    def __init__(self, axis_name: str = "party", axis_size: int = 2):
+        if self.n_parties % axis_size:
+            raise ValueError(
+                f"party axis size {axis_size} must divide {self.n_parties}")
         self.axis_name = axis_name
+        self.axis_size = axis_size
+        self.local_parties = self.n_parties // axis_size
 
     def swap(self, x):
-        perm = [(0, 1), (1, 0)]
-        return jax.tree_util.tree_map(
-            lambda a: lax.ppermute(a, self.axis_name, perm), x
-        )
+        """Global party flip = local party-dim flip + mesh-axis reversal."""
+        perm = [(i, self.axis_size - 1 - i) for i in range(self.axis_size)]
+
+        def exchange(a):
+            if a.shape[0] > 1:                 # flip the local party rows
+                a = jnp.flip(a, axis=0)
+            if self.axis_size > 1:             # exchange across the mesh
+                a = lax.ppermute(a, self.axis_name, perm)
+            return a
+
+        return jax.tree_util.tree_map(exchange, x)
+
+    def _global_party_index(self, template: jax.Array) -> jax.Array:
+        """(local_parties, 1, ..., 1) global party index of each local row."""
+        local = jnp.arange(self.local_parties).reshape(
+            (self.local_parties,) + (1,) * (template.ndim - 1))
+        return lax.axis_index(self.axis_name) * self.local_parties + local
 
     def party_is(self, p: int, template: jax.Array) -> jax.Array:
-        idx = lax.axis_index(self.axis_name)
-        return jnp.full((1,) * template.ndim, idx == p)
+        return self._global_party_index(template) == p
+
+    def party_slice(self, full: jax.Array) -> jax.Array:
+        """Local party rows of a full-party-dim (n_parties, ...) array."""
+        if self.local_parties == self.n_parties:
+            return full
+        start = lax.axis_index(self.axis_name) * self.local_parties
+        return lax.dynamic_slice_in_dim(full, start, self.local_parties, 0)
 
 
 class CountingComm:
@@ -110,6 +165,9 @@ class CountingComm:
 
     def party_is(self, p: int, template: jax.Array) -> jax.Array:
         return self.base.party_is(p, template)
+
+    def party_slice(self, full: jax.Array) -> jax.Array:
+        return self.base.party_slice(full)
 
 
 class CoalescingComm:
@@ -186,3 +244,6 @@ class CoalescingComm:
 
     def party_is(self, p: int, template: jax.Array) -> jax.Array:
         return self.base.party_is(p, template)
+
+    def party_slice(self, full: jax.Array) -> jax.Array:
+        return self.base.party_slice(full)

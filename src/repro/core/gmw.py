@@ -206,7 +206,14 @@ def adder_msb(xw: jax.Array, yw: jax.Array, triples: beaver.ReluTriples,
 # ---------------------------------------------------------------------------
 
 def _a2b_prepare_rounds(key, v_packed: jax.Array, comm):
-    r = jax.random.bits(key, v_packed.shape, dtype=_U32)
+    # party-dependent randomness: every party derives the FULL (n_parties,
+    # ...) mask array from the shared key and keeps only its own rows via
+    # ``comm.party_slice`` — identity on the sim backend (local party dim
+    # is already all parties), the local shard on the mesh backend.  The
+    # masks are therefore bit-identical across backends by construction.
+    full = jax.random.bits(key, (comm.n_parties,) + v_packed.shape[1:],
+                           dtype=_U32)
+    r = comm.party_slice(full)
     masked = v_packed ^ r
     other_mask = yield r
     p0 = comm.party_is(0, v_packed)

@@ -195,6 +195,53 @@ class Schedule:
         wire = 2 * self.bytes_tx * 8 / bandwidth_bps
         return wire + self.n_rounds * rtt_s + compute_s
 
+    # -- rendering -------------------------------------------------------------
+    def gantt(self, col: int = 6) -> str:
+        """ASCII/markdown Gantt of the fused-round timeline.
+
+        One row per protocol phase, one column per coalesced exchange;
+        a ``█``-bar marks every phase contributing bytes to that round, so
+        cross-phase overlap (a shallow group's B2A riding a deep group's
+        adder levels) is visible as two bars in one column.  Footer rows
+        carry the coalesced payload count and per-party one-direction
+        bytes of each round — the exact ``CoalescingComm`` counters (and,
+        on the mesh backend, the per-collective-permute payloads of the
+        compiled HLO).  Drop the output in a fenced code block for
+        markdown.
+        """
+        if not self.slots:
+            return "(empty schedule: 0 rounds, 0 bytes)"
+
+        def cell(s: str) -> str:
+            return s.rjust(col)
+
+        def fmt_bytes(b: int) -> str:
+            if b < 1024:
+                return str(b)
+            if b < 10 * 1024:
+                return f"{b / 1024:.1f}k"
+            if b < 1024 * 1024:
+                return f"{b // 1024}k"
+            return f"{b / (1024 * 1024):.1f}M"
+
+        label = max(len(p) for p in PHASES + ("bytes/pty", "round"))
+        lines = ["round".ljust(label) + " |"
+                 + "".join(cell(str(r + 1)) for r in range(self.n_rounds))]
+        for phase in PHASES:
+            contrib = [dict(s.phase_bytes).get(phase, 0) for s in self.slots]
+            if not any(contrib):
+                continue
+            bar = "█" * (col - 2)
+            lines.append(phase.ljust(label) + " |" + "".join(
+                cell(bar if b else "·") for b in contrib))
+        lines.append("payloads".ljust(label) + " |"
+                     + "".join(cell(str(s.parts)) for s in self.slots))
+        lines.append("bytes/pty".ljust(label) + " |"
+                     + "".join(cell(fmt_bytes(s.bytes_tx)) for s in self.slots))
+        lines.append(f"total: {self.n_rounds} fused rounds, "
+                     f"{self.bytes_tx} B/party one-direction")
+        return "\n".join(lines)
+
     # -- composition -----------------------------------------------------------
     def __add__(self, other: "Schedule") -> "Schedule":
         """Sequential composition: ``other`` starts after ``self`` ends

@@ -49,8 +49,20 @@ def make_mpc_mesh(n_data: Optional[int] = None):
 
 def make_mpc_smoke_mesh():
     """1-device MPC mesh with the serving axis names (CPU smoke tests:
-    both party shards land on the same device, shardings still resolve)."""
+    both party shards land on the same device, shardings still resolve,
+    and the mesh-native serve path degenerates to local exchanges)."""
     return jax.make_mesh((1, 1), ("party", "data"))
+
+
+def mpc_serving_mesh():
+    """Best MPC mesh the current topology supports: the full
+    ``make_mpc_mesh`` (party axis size 2 — one device slice per
+    non-colluding server, protocol exchanges are real collectives) when at
+    least two devices exist, else the 1-device smoke mesh (party axis size
+    1 — exchanges stay local).  Entry point for serving scripts and the
+    quick benchmark's mesh-lowering census."""
+    return (make_mpc_mesh() if jax.device_count() >= 2
+            else make_mpc_smoke_mesh())
 
 
 def make_smoke_mesh():

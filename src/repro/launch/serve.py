@@ -5,11 +5,15 @@ LM serving lowers ``prefill_step`` for prefill shapes and ``serve_step``
 as the brief specifies.
 
 MPC serving runs the GMW protocol with the *party dimension sharded over
-the mesh* ("party" = pod): every protocol exchange (the sim backend's
-party-flip) lowers to a collective-permute between the two 256-chip
-parties, so the paper's communication reduction is directly visible in the
-HLO collective bytes.  Beaver triples enter as step inputs (offline TTP,
-matching the paper's evaluation assumptions).
+the mesh* ("party" = pod).  The mesh-native path (``mesh=`` given) runs
+the round-fused replay inside ``shard_map`` over the party axis, so every
+fused protocol round lowers to exactly ONE collective-permute between the
+two parties — the paper's communication reduction is directly countable
+in the HLO (``runtime.hlo_analyzer.collective_census``).  The legacy path
+(``mesh=None``) materialises the party dim (SimComm) and leaves the
+splitting to XLA via the caller's in_shardings.  Beaver triples enter as
+step inputs either way (offline TTP, matching the paper's evaluation
+assumptions).
 """
 from __future__ import annotations
 
@@ -72,56 +76,46 @@ def greedy_decode_loop(params, cfg: ArchConfig, cache, first_token,
 # ---------------------------------------------------------------------------
 
 def make_mpc_serve_step(rcfg: ResNetConfig, hb: Optional[HBConfig],
-                        cone: bool = False):
+                        cone: bool = False, mesh=None,
+                        party_axis: str = "party"):
     """Returns step(params, lo, hi, triples, key) -> (lo, hi) logits shares.
 
-    lo/hi: Ring64 limbs of the input shares, shape (2, B, 3, H, W), party
-    dim sharded over the mesh's party/pod axis by the caller's in_shardings.
+    lo/hi: Ring64 limbs of the input shares, shape (2, B, 3, H, W).
 
     Thin wrapper over ``repro.api``: the plan replay and triple pool come
-    from ``PrivateModel.serve_step`` (SimComm materialises the party dim;
-    XLA shards every exchange into a collective-permute).
+    from ``PrivateModel.serve_step``.  With ``mesh=None`` the party dim is
+    materialised (SimComm) and the caller's in_shardings decide how XLA
+    splits each exchange; with a mesh carrying a party axis the replay is
+    mesh-native — it runs inside ``shard_map`` over the party axis and
+    every fused protocol round lowers to exactly one collective-permute
+    (see ``PrivateModel.serve_step``).
     """
     model = api.compile(None, None, rcfg,
                         api.Plan.from_hb(resnet.hb_or_exact(hb, rcfg),
                                          cone=cone, name=rcfg.name),
                         api.Session())
-    return model.serve_step()
+    return model.serve_step(mesh, party_axis=party_axis)
 
 
 def _triple_pool_shardings(pool, mesh, party_axis: str):
-    """Party-dim shardings for an offline triple pool, derived from the
-    ``ReluTriples`` *structure* itself (one bundle or None per ReLU call,
-    see ``Plan.triple_specs``/``beaver.gen_plan_triples``).
+    """Party-dim ``NamedSharding`` specs for an offline triple pool.
 
-    The party dimension's position is fixed by construction: leading for
-    ``bin_init``, the arithmetic members and cone-mode per-level bin
-    triples; second (behind the stacked L axis) for dense ``bin_levels``.
-    Dense vs cone is a structural property too (one stacked ``BinTriple``
-    vs a per-level tuple), so nothing here guesses from pytree-path
-    strings or from ``shape[dim] == 2`` — a 2-element group or a 2-wide
-    plane axis can no longer be mistaken for the party dim (the historical
-    bug this replaces).
+    The party-dim placement comes from ``beaver.pool_party_specs`` — the
+    structural derivation (leading for ``bin_init``/arith/cone levels,
+    second for dense ``bin_levels``) shared with the mesh-native
+    ``serve_step``'s ``shard_map`` in_specs, so jit input shardings and
+    the shard_map replay can never disagree.  Nothing here guesses from
+    pytree-path strings or from ``shape[dim] == 2`` — a 2-element group
+    or a 2-wide plane axis can no longer be mistaken for the party dim
+    (the historical bug this replaces).
     """
-    def at(party_dim: int):
-        def shard(leaf):
-            spec = [None] * len(leaf.shape)
-            spec[party_dim] = party_axis
-            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
-                                        sharding=NamedSharding(mesh, P(*spec)))
-        return lambda tree: jax.tree_util.tree_map(shard, tree)
+    specs = beaver.pool_party_specs(pool, party_axis)
 
-    def bundle_shardings(bundle):
-        if bundle is None:               # culled / empty call: no triples
-            return None
-        if isinstance(bundle.bin_levels, beaver.BinTriple):
-            levels = at(1)(bundle.bin_levels)       # dense: (L, P, 2w, W)
-        else:                                       # cone: ragged per level
-            levels = tuple(at(0)(t) for t in bundle.bin_levels)
-        return beaver.ReluTriples(at(0)(bundle.bin_init), levels,
-                                  at(0)(bundle.b2a), at(0)(bundle.mult))
+    def shard(leaf, spec):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
 
-    return [bundle_shardings(b) for b in pool]
+    return jax.tree_util.tree_map(shard, pool, specs)
 
 
 def mpc_input_specs(rcfg: ResNetConfig, batch: int, mesh,

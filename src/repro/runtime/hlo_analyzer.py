@@ -77,6 +77,22 @@ class OpInfo:
     operands: List[str]
 
 
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective instruction of the walked program.
+
+    ``bytes`` is the one-direction payload of a single execution as seen
+    by the local shard (for a collective-permute under ``shard_map`` over
+    the party axis this is exactly the per-party one-direction wire bytes
+    the round-schedule simulator predicts); ``count`` is how many times
+    the instruction executes after while-loop trip-count scaling.
+    """
+
+    kind: str
+    bytes: int
+    count: int = 1
+
+
 @dataclasses.dataclass
 class Metrics:
     flops: float = 0.0
@@ -254,8 +270,90 @@ class HloAnalysis:
         return total
 
 
+    # -- collective census ---------------------------------------------------
+
+    def collectives(self, comp: Optional[str] = None,
+                    scale: int = 1) -> List[CollectiveOp]:
+        """Program-order census of every collective the program executes.
+
+        Walks the same call graph as ``metrics`` (fusions, while bodies
+        scaled by ``known_trip_count``, calls; conditionals take the
+        byte-heaviest branch) and emits one ``CollectiveOp`` per
+        collective instruction in program order.  Async pairs
+        (``*-start``/``*-done``) count once, at the start, with the
+        payload taken from the start's operand shape.
+        """
+        out: List[CollectiveOp] = []
+        comp = comp or self.entry
+        if comp not in self.computations:
+            return out
+        symtab, ops = self._ops(comp)
+        for op in ops:
+            base = op.kind
+            if base.endswith("-done"):
+                continue
+            if base.endswith("-start"):
+                base = base[: -len("-start")]
+            if base in COLLECTIVES:
+                if op.kind.endswith("-start"):
+                    payload = (_shape_bytes(symtab.get(op.operands[0], ""))
+                               if op.operands else 0)
+                    if payload == 0:   # operand outside this scope: the
+                        payload = _shape_bytes(op.out_type) // 2
+                        # start's tuple type carries (operand, result)
+                else:
+                    payload = _shape_bytes(op.out_type)
+                out.append(CollectiveOp(base, payload, scale))
+            if op.kind == "fusion":
+                m = _CALLS_RE.search(op.line)
+                if m:
+                    out.extend(self.collectives(m.group(1), scale))
+            elif op.kind == "while":
+                trips = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trips = int(tm.group(1))
+                bm = _BODY_RE.search(op.line)
+                if bm:
+                    out.extend(self.collectives(bm.group(1), scale * trips))
+            elif op.kind == "conditional":
+                bm = _BRANCHES_RE.search(op.line)
+                if bm:
+                    branches = [b.strip().lstrip("%") for b in
+                                bm.group(1).split(",") if b.strip()]
+                    per_branch = [self.collectives(b, scale) for b in branches]
+                    if per_branch:
+                        out.extend(max(
+                            per_branch,
+                            key=lambda cs: sum(c.bytes * c.count for c in cs)))
+            elif op.kind == "call":
+                m = re.search(r"to_apply=%?([\w.\-]+)", op.line)
+                if m:
+                    out.extend(self.collectives(m.group(1), scale))
+        return out
+
+
 def analyze(hlo_text: str) -> Metrics:
     return HloAnalysis(hlo_text).metrics()
+
+
+def collective_census(hlo_text: str,
+                      kind: Optional[str] = "collective-permute",
+                      ) -> List[CollectiveOp]:
+    """Census of the collectives a compiled program executes, in program
+    order; by default only collective-permutes (the MPC exchange op).
+
+    This is the mesh half of the HLO-vs-costmodel validation: for a
+    mesh-native round-fused serve step (``PrivateModel.serve_step(mesh)``
+    over a party axis of size 2) the census must list exactly
+    ``plan.schedule().n_rounds`` collective-permutes whose per-collective
+    bytes match ``plan.schedule().round_bytes`` — the compiled artifact
+    *is* the predicted timeline.  Pass ``kind=None`` for every collective.
+    """
+    census = HloAnalysis(hlo_text).collectives()
+    if kind is None:
+        return census
+    return [c for c in census if c.kind == kind]
 
 
 def normalize_cost_analysis(ca) -> Dict[str, float]:

@@ -229,3 +229,55 @@ def test_plan_cost_streams_matches_measured_replay():
     assert cm.bytes_tx == plan.cost(streams=3).bytes_tx
     sched = model.schedule(streams=3)
     assert cm.round_bytes == list(sched.round_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Gantt rendering
+# ---------------------------------------------------------------------------
+
+def test_gantt_shows_cross_phase_overlap_and_counters():
+    """One row per live phase, one column per fused round; a round where a
+    shallow group's B2A rides a deep group's adder level shows two bars in
+    one column, and the footer rows are the CoalescingComm counters."""
+    sched = schedule.simulate([(64, 8), (64, 2)], auto_batch=False)
+    text = sched.gantt()
+    lines = {ln.split("|")[0].strip(): ln for ln in text.splitlines()
+             if "|" in ln}
+    assert set(lines) == {"round", "others", "circuit", "b2a", "mult",
+                          "payloads", "bytes/pty"}
+    # width-2 stream: others, circuit(init+1 level), b2a, mult -> its b2a
+    # (round 4) overlaps the width-8 stream's adder levels
+    cols = [c for c in lines["circuit"].split("|")[1].split() ]
+    b2a_cols = [c for c in lines["b2a"].split("|")[1].split()]
+    overlap = [i for i, (a, b) in enumerate(zip(cols, b2a_cols))
+               if a != "·" and b != "·"]
+    assert overlap, (text,)
+    assert f"total: {sched.n_rounds} fused rounds" in text
+    assert str(sched.bytes_tx) in text
+
+
+def test_gantt_empty_schedule():
+    assert "0 rounds" in schedule.simulate([]).gantt()
+
+
+def test_plan_gantt_marks_culled_calls():
+    from repro import api
+    from repro.core.hummingbird import HBConfig, HBLayer
+
+    plan = api.Plan(
+        calls=(api.ReluCall(96, 0, (96,)), api.ReluCall(32, 1, (32,))),
+        hb=HBConfig((HBLayer(k=21, m=13), HBLayer(k=13, m=13)), (96, 32)))
+    text = plan.gantt()
+    assert "call 0" in text and "call 1" in text
+    assert "culled" in text            # width-0 group renders no timeline
+    total = plan.schedule()
+    assert f"replay total: {total.n_rounds} fused rounds" in text
+
+
+def test_plan_gantt_requires_trace():
+    from repro import api
+    from repro.core.hummingbird import HBConfig, HBLayer
+
+    trace_free = api.Plan.from_hb(HBConfig((HBLayer(k=21, m=13),), (10,)))
+    with pytest.raises(ValueError, match="traced plan"):
+        trace_free.gantt()

@@ -1,0 +1,83 @@
+"""Docs smoke: the documentation surface must stay executable and linked.
+
+Two gates, run by CI (see .github/workflows/ci.yml) and locally via
+
+    python tools/docs_smoke.py
+
+1. The README quickstart: every ```python fenced block in README.md is
+   extracted and executed in a subprocess with PYTHONPATH=src — the
+   quickstart must run exactly as readers would copy-paste it.
+2. Intra-repo links: every relative markdown link target in README.md
+   and docs/**/*.md must exist on disk (external http(s)/mailto links
+   are not touched).
+
+Exit code is non-zero on any failure, with one line per problem.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+_FENCE_RE = re.compile(r"```python\n(.*?)```", re.S)
+# [text](target) — skip images' inner text handling; good enough for md
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def run_python_blocks(md_path: pathlib.Path) -> list:
+    """Execute every ```python block of one markdown file; return errors."""
+    errors = []
+    blocks = _FENCE_RE.findall(md_path.read_text())
+    for i, block in enumerate(blocks):
+        proc = subprocess.run(
+            [sys.executable, "-c", block], cwd=ROOT, text=True,
+            capture_output=True, timeout=600,
+            env={**__import__("os").environ,
+                 "PYTHONPATH": str(ROOT / "src")})
+        if proc.returncode != 0:
+            errors.append(
+                f"{md_path.relative_to(ROOT)}: python block {i + 1} failed:\n"
+                f"{proc.stderr.strip()[-1500:]}")
+    if not blocks:
+        errors.append(f"{md_path.relative_to(ROOT)}: no ```python "
+                      "quickstart block found")
+    return errors
+
+
+def check_links(md_paths) -> list:
+    """Every relative link target must exist relative to its file."""
+    errors = []
+    for md in md_paths:
+        for target in _LINK_RE.findall(md.read_text()):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
+                continue
+            path = target.split("#", 1)[0]
+            if not path:                                   # pure #anchor
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    readme = ROOT / "README.md"
+    docs = sorted((ROOT / "docs").glob("**/*.md"))
+    errors = run_python_blocks(readme)
+    errors += check_links([readme] + docs)
+    for e in errors:
+        print(f"DOCS-SMOKE: {e}", file=sys.stderr)
+    if not errors:
+        n_links = sum(len(_LINK_RE.findall(p.read_text()))
+                      for p in [readme] + docs)
+        print(f"docs smoke OK: README quickstart ran, {n_links} links "
+              f"checked across {1 + len(docs)} files")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
