@@ -152,6 +152,52 @@ def quick(out_path: str = "BENCH_relu.json") -> dict:
             "mesh_collective_bytes": sum(c.bytes * c.count for c in census),
         }
 
+    # request-level serving engine: the canonical ISSUE-5 request mix (two
+    # identical shapes + one ragged) served as one fused micro-batch over
+    # the smoke model — requests/s, simulated latency percentiles, and the
+    # rounds saved vs serial per-request execution (--check gates the
+    # measured fused rounds against the merged-schedule prediction)
+    from repro import api
+    from repro.configs import RESNET_SMOKE
+    from repro.core.hummingbird import HBConfig, HBLayer
+    from repro.models import resnet
+    from repro.serve import InferenceEngine
+
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+
+    def afn(p, v, relu_fn=None):
+        return resnet.apply(p, v, RESNET_SMOKE, relu_fn=relu_fn)
+
+    plan = api.trace_plan(afn, params, (2, 3, 8, 8), name="smoke")
+    plan = plan.with_hb(HBConfig(
+        tuple([HBLayer(k=21, m=13)] * (plan.n_groups - 1)
+              + [HBLayer(k=13, m=13)]), plan.group_elements))
+    engine = InferenceEngine(afn, params, RESNET_SMOKE, plan,
+                             api.Session(key=0))
+    mix = [(2, 3, 8, 8), (2, 3, 8, 8), (1, 3, 8, 8)]
+    xs = [rng.uniform(-0.5, 0.5, sh).astype(np.float32) for sh in mix]
+    t0 = time.perf_counter()
+    futs = [engine.submit(t, x) for t, x in zip("aba", xs)]
+    engine.flush()
+    jax.block_until_ready([f.result().data.lo for f in futs])
+    wall_engine = time.perf_counter() - t0
+    st = engine.stats()
+    results["engine"] = {
+        "mix": [list(sh) for sh in mix],
+        "requests": int(st["requests"]),
+        "batches": int(st["batches"]),
+        "fused_rounds": int(st["fused_rounds"]),
+        "serial_rounds": int(st["serial_rounds"]),
+        "sched_rounds_pred": sum(r.predicted_rounds for r in engine.reports),
+        "sched_bytes_pred": sum(r.predicted_bytes for r in engine.reports),
+        "bytes_fused": sum(r.measured_bytes for r in engine.reports),
+        "rounds_saved_ratio": round(st["rounds_saved_ratio"], 3),
+        "requests_per_s": round(st["requests"] / max(wall_engine, 1e-9), 3),
+        "p50_sim_latency_ms": round(st["p50_sim_latency_s"] * 1e3, 3),
+        "p95_sim_latency_ms": round(st["p95_sim_latency_s"] * 1e3, 3),
+        "wall_s": round(wall_engine, 4),
+    }
+
     results["multigroup"] = {
         **mesh_census,
         "groups": [{"n": n, "k": k, "m": m} for n, k, m in specs],
@@ -191,7 +237,8 @@ def check(path: str = "BENCH_relu.json") -> int:
     with open(path) as f:
         data = json.load(f)
     failures = []
-    entries = [("multigroup", data.get("multigroup", {}), "swaps_fused")]
+    entries = [("multigroup", data.get("multigroup", {}), "swaps_fused"),
+               ("engine", data.get("engine", {}), "fused_rounds")]
     entries += [(name, c, "rounds")
                 for name, c in data.get("configs", {}).items()]
     for name, entry, measured_key in entries:
@@ -222,8 +269,12 @@ def check(path: str = "BENCH_relu.json") -> int:
         for msg in failures:
             print(f"ROUND-REGRESSION: {msg}", file=sys.stderr)
         return 1
+    eng = data.get("engine", {})
     print(f"round gate OK: multigroup swaps_fused={mg.get('swaps_fused')} "
-          f"<= sched_rounds_pred={mg.get('sched_rounds_pred')}"
+          f"<= sched_rounds_pred={mg.get('sched_rounds_pred')}; engine "
+          f"fused_rounds={eng.get('fused_rounds')} <= "
+          f"sched_rounds_pred={eng.get('sched_rounds_pred')} "
+          f"({eng.get('rounds_saved_ratio')}x rounds saved vs serial)"
           + (f"; mesh HLO census {mesh_rounds} collective-permutes / "
              f"{mesh_bytes} B == schedule" if mesh_rounds is not None
              else " (no mesh census: single device)"))

@@ -1,0 +1,77 @@
+"""Request-level serving: concurrent tenants share fused protocol rounds.
+
+Three requests from two tenants — two identical shapes and one ragged —
+are submitted to an ``InferenceEngine`` and served as ONE fused
+micro-batch: every request advances through the GMW protocol in lockstep,
+so the batch pays max-over-requests rounds instead of the sum, while each
+request keeps its own PRNG stream (forked from its request id) and its
+tenant's metered triple budget.
+
+    PYTHONPATH=src python examples/serving_engine.py
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro import api
+from repro.configs import RESNET_SMOKE
+from repro.core import schedule as schedule_lib
+from repro.models import resnet
+from repro.serve import BatchPolicy, InferenceEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--network", default="lan", choices=["lan", "wan",
+                                                         "highbw"])
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--merge-identical", action="store_true",
+                    help="opt into cross-request relu_many auto-batching")
+    args = ap.parse_args()
+
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+
+    def afn(p, v, relu_fn=None):
+        return resnet.apply(p, v, RESNET_SMOKE, relu_fn=relu_fn)
+
+    plan = api.trace_plan(afn, params, (2, 3, 8, 8), name=RESNET_SMOKE.name)
+    plan = plan.with_hb(api.HBConfig(
+        tuple([api.HBLayer(k=21, m=13)] * plan.n_groups),
+        plan.group_elements))
+
+    engine = InferenceEngine(
+        afn, params, RESNET_SMOKE, plan, api.Session(key=0),
+        policy=BatchPolicy(network=args.network, max_batch=args.max_batch,
+                           merge_identical=args.merge_identical),
+        tenant_budgets={"bob": 200_000})
+
+    mix = [("alice", (2, 3, 8, 8)), ("bob", (2, 3, 8, 8)),
+           ("alice", (1, 3, 8, 8))]
+    futures = []
+    for i, (tenant, shape) in enumerate(mix):
+        x = jax.random.normal(jax.random.PRNGKey(10 + i), shape) * 0.5
+        futures.append(engine.submit(tenant, x))
+
+    outs = [f.result().reveal_np() for f in futures]   # drains the queue
+    for (tenant, shape), out in zip(mix, outs):
+        print(f"{tenant}: {shape} -> logits argmax "
+              f"{np.argmax(out, -1).tolist()}")
+
+    rep = engine.reports[0]
+    print(f"\none fused micro-batch of {rep.n_requests} requests: "
+          f"{rep.measured_rounds} rounds measured "
+          f"(schedule predicted {rep.predicted_rounds}); serial execution "
+          f"would pay {rep.serial_rounds} -> "
+          f"{rep.rounds_saved_ratio:.1f}x rounds saved")
+    for tenant in ("alice", "bob"):
+        print(f"{tenant} triples: {engine.tenant_usage(tenant)}")
+
+    print("\nmerged-batch Gantt (first ReLU call of the batch):")
+    specs = [engine.plan_for_shape((b, 3, 8, 8)).call_specs()[:1]
+             for _, (b, *_rest) in mix]
+    print(schedule_lib.simulate_merged(specs, auto_batch=False).gantt())
+
+
+if __name__ == "__main__":
+    main()

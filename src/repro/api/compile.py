@@ -115,6 +115,8 @@ class PrivateModel:
     session: Session
     mpc_forward: Callable
     auto_batch: bool = True
+    _step_cache: Dict = dataclasses.field(default_factory=dict, repr=False,
+                                          compare=False)
 
     # -- convenience ----------------------------------------------------------
     def encrypt(self, key, x_f) -> MPCTensor:
@@ -149,16 +151,38 @@ class PrivateModel:
     def _run(self, tensors: List[MPCTensor], key, comm, provider, params):
         """Replay the plan over sibling streams: one relu_many per ReLU
         call, keys consumed per stream in call order (bit-identical to the
-        historical per-call `.relu` path for a single stream)."""
+        historical per-call `.relu` path for a single stream).  One shared
+        key stream and one shared triple provider — the single-caller
+        contract; the serving engine instead passes per-request streams
+        through ``_run_streams``."""
+        key_iter = iter(jax.random.split(key, 256 * max(1, len(tensors))))
+        return self._run_streams(tensors, [key_iter] * len(tensors),
+                                 [provider] * len(tensors), comm, params)
+
+    def _run_streams(self, tensors: List[MPCTensor], key_iters: List,
+                     providers: List, comm, params,
+                     auto_batch: Optional[bool] = None):
+        """Replay the plan with *per-stream* key iterators and triple
+        providers (the cross-request serving path: stream i is request i,
+        its keys fork from ``Session.request_key(request_id)`` and its
+        triples are metered against its tenant).  At every ReLU call,
+        stream i draws one key from ``key_iters[i]`` and one bundle from
+        ``providers[i]`` — exactly what it would draw running alone, so
+        with ``auto_batch=False`` the coalesced batch execution is
+        bit-identical (share-level) to serial per-request execution on the
+        same shares/triples; sibling streams still share every protocol
+        round."""
         hb_layers = self.plan.hb.layers
         cone = self.plan.cone
-        key_iter = iter(jax.random.split(key, 256 * max(1, len(tensors))))
+        if auto_batch is None:
+            auto_batch = self.auto_batch
 
         def _relu(hs: List[MPCTensor], g: int) -> List[MPCTensor]:
             hb = hb_layers[g]
-            keys = [next(key_iter) for _ in hs]
-            tris = [provider.relu_triples(math.prod(h.shape), hb.width,
-                                          cone=cone) for h in hs]
+            keys = [next(key_iters[i]) for i in range(len(hs))]
+            tris = [providers[i].relu_triples(math.prod(h.shape), hb.width,
+                                              cone=cone)
+                    for i, h in enumerate(hs)]
             outs = list(hs)
             # zero-element streams (empty batch) have nothing to compute
             live = [i for i, h in enumerate(hs) if math.prod(h.shape)]
@@ -167,7 +191,7 @@ class PrivateModel:
                                  [hs[i] for i in live],
                                  comm=comm, hbs=[hb] * len(live),
                                  triples_list=[tris[i] for i in live],
-                                 cone=cone, auto_batch=self.auto_batch)
+                                 cone=cone, auto_batch=auto_batch)
                 for j, i in enumerate(live):
                     outs[i] = rets[j]
             return outs
@@ -175,7 +199,8 @@ class PrivateModel:
         return self.mpc_forward(params, tensors, self.cfg, _relu, comm)
 
     # -- mesh serving ---------------------------------------------------------
-    def serve_step(self, mesh=None, *, party_axis: str = "party") -> Callable:
+    def serve_step(self, mesh=None, *, party_axis: str = "party",
+                   data_axis: Optional[str] = None) -> Callable:
         """step(params, lo, hi, triples, key) -> (lo, hi) logits shares.
 
         ``lo``/``hi`` are the Ring64 limbs of the input shares, shape
@@ -202,11 +227,25 @@ class PrivateModel:
         inline providers would have to conjure cross-party randomness
         inside a single party's shard.
 
+        With ``data_axis``, the step additionally shards the *request
+        batch* over that mesh axis (the ROADMAP data-axis item): lo/hi
+        split their batch dimension, ``triples`` must be the data-sharded
+        pool from ``beaver.shard_pool(pool, mesh.shape[data_axis])`` (each
+        leaf carries a leading data-shard dim holding that shard's
+        bit-level element slice), and every data shard runs an independent
+        party-axis protocol on its batch rows — the per-shard HLO
+        collective census is unchanged (same fused rounds, per-shard
+        payloads) and the revealed outputs equal the unsharded replay's.
+
         Example::
 
             mesh = launch.mesh.make_mpc_mesh()        # (2, n_data)
             step = jax.jit(model.serve_step(mesh))
             lo, hi = step(params, X.data.lo, X.data.hi, pool, key)
+
+            sharded = beaver.shard_pool(pool, mesh.shape["data"])
+            step2 = jax.jit(model.serve_step(mesh, data_axis="data"))
+            lo, hi = step2(params, X.data.lo, X.data.hi, sharded, key)
         """
         if mesh is None:
             def step(params, lo, hi, triples, key):
@@ -225,11 +264,17 @@ class PrivateModel:
         if party_axis not in mesh.axis_names:
             raise ValueError(
                 f"mesh axes {mesh.axis_names} carry no {party_axis!r} axis")
+        if data_axis is not None and data_axis not in mesh.axis_names:
+            raise ValueError(
+                f"mesh axes {mesh.axis_names} carry no {data_axis!r} axis")
         axis_size = mesh.shape[party_axis]
 
         def _replay(params, lo, hi, triples, key):
             comm = comm_lib.CoalescingComm(
                 comm_lib.MeshComm(party_axis, axis_size))
+            if data_axis is not None:
+                # sharded pool: strip the (local size 1) data-shard dim
+                triples = jax.tree_util.tree_map(lambda a: a[0], triples)
             x = MPCTensor(ring.Ring64(lo, hi))
             out = self._run([x], key, comm, beaver.TriplePool(triples),
                             params)[0]
@@ -240,13 +285,32 @@ class PrivateModel:
                 raise ValueError(
                     "mesh-native serve_step needs an offline triple pool "
                     "(beaver.gen_plan_triples(key, plan.triple_specs()))")
-            party = PartitionSpec(party_axis)
+            share = (PartitionSpec(party_axis, data_axis) if data_axis
+                     else PartitionSpec(party_axis))
             rep = PartitionSpec()
             fused = shard_map(
                 _replay, mesh=mesh,
-                in_specs=(rep, party, party,
-                          beaver.pool_party_specs(triples, party_axis), rep),
-                out_specs=(party, party), check_rep=False)
+                in_specs=(rep, share, share,
+                          beaver.pool_party_specs(triples, party_axis,
+                                                  data_axis=data_axis), rep),
+                out_specs=(share, share), check_rep=False)
             return fused(params, lo, hi, triples, key)
 
         return step
+
+    def jit_step(self, mesh=None, *, party_axis: str = "party",
+                 data_axis: Optional[str] = None) -> Callable:
+        """Cached-lowering serve path: ``serve_step`` built once per
+        (mesh, party_axis, data_axis) and — on the mesh backend — wrapped
+        in ``jax.jit`` so repeated calls reuse the compiled executable
+        (jax's own trace cache then keys on the padded batch shape, which
+        is why the serving engine buckets request shapes).  The sim path
+        is returned unjitted: its triple providers are stateful Python.
+        """
+        cache_key = (mesh, party_axis, data_axis)
+        if cache_key not in self._step_cache:
+            step = self.serve_step(mesh, party_axis=party_axis,
+                                   data_axis=data_axis)
+            self._step_cache[cache_key] = (
+                jax.jit(step) if mesh is not None else step)
+        return self._step_cache[cache_key]

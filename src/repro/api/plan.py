@@ -111,6 +111,21 @@ class Plan:
         return tuple((c.n_elements, self.hb.layers[c.group].width)
                      for c in self.calls)
 
+    def call_specs(self) -> Tuple[Tuple[int, int, Tuple[int, int, int]], ...]:
+        """``(n_elements, width, batch_key)`` per ReLU call, in call order
+        — one ``core.schedule.simulate`` spec per call, with the engine's
+        ``(n_elements, k, m)`` auto-batch key attached.  This is one
+        request's row of a merged micro-batch: the serving engine feeds
+        one such sequence per concurrent request to
+        ``core.schedule.simulate_merged`` to predict the batch's fused
+        timeline."""
+        specs = []
+        for c in self.calls:
+            layer = self.hb.layers[c.group]
+            specs.append((c.n_elements, layer.width,
+                          (c.n_elements, layer.k, layer.m)))
+        return tuple(specs)
+
     # -- analytics ------------------------------------------------------------
     def schedule(self, streams: int = 1,
                  auto_batch: bool = True) -> schedule_lib.Schedule:
@@ -134,10 +149,7 @@ class Plan:
                 "without a call list (Plan.from_hb) — use trace_plan / "
                 "model-specific trace() to get one")
         total = schedule_lib.Schedule.empty()
-        for c in self.calls:
-            layer = self.hb.layers[c.group]
-            spec = (c.n_elements, layer.width, (c.n_elements, layer.k,
-                                                layer.m))
+        for spec in self.call_specs():
             total = total + schedule_lib.simulate(
                 [spec] * streams, cone=self.cone, auto_batch=auto_batch)
         return total
@@ -161,10 +173,8 @@ class Plan:
                 "trace() to get one")
         blocks: List[str] = []
         total = schedule_lib.Schedule.empty()
-        for idx, c in enumerate(self.calls):
+        for idx, (c, spec) in enumerate(zip(self.calls, self.call_specs())):
             layer = self.hb.layers[c.group]
-            spec = (c.n_elements, layer.width,
-                    (c.n_elements, layer.k, layer.m))
             sched = schedule_lib.simulate([spec] * streams, cone=self.cone,
                                           auto_batch=auto_batch)
             total = total + sched

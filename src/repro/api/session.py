@@ -46,11 +46,22 @@ class Session:
         if key is None:
             key = 0
         self._key = jax.random.PRNGKey(key) if isinstance(key, int) else key
+        self._base_key = self._key
 
     def next_key(self) -> jax.Array:
         """One fresh request key off the session's PRNG stream."""
         self._key, k = jax.random.split(self._key)
         return k
+
+    def request_key(self, request_id: int) -> jax.Array:
+        """Per-request protocol key, forked deterministically from the
+        session *seed* (never from the mutable ``next_key`` stream):
+        ``fold_in(seed, request_id)``.  Two submissions with the same id
+        get the same key in ANY admission order, so concurrent serving is
+        reproducible — a request's protocol randomness cannot depend on
+        which other requests happened to be in flight (the serving
+        engine's randomness contract; see ``repro.serve``)."""
+        return jax.random.fold_in(self._base_key, request_id)
 
     def offline(self, key, plan, requests: int = 1,
                 streams: int = 1) -> "Session":

@@ -173,8 +173,76 @@ def concat_relu_triples(bundles: Sequence[ReluTriples],
                        cat_arith([b.mult for b in bundles]))
 
 
+def shard_relu_triples(bundle: "ReluTriples", data_index: int,
+                       n_shards: int) -> "ReluTriples":
+    """One data shard's element-axis slice of a ReluTriples bundle.
+
+    The inverse direction of ``concat_relu_triples``: the party dimension
+    is untouched, arithmetic members slice the element axis directly, and
+    packed binary members are split at the *bit* level (unpack each plane
+    to its element bits, slice, repack) because word boundaries shift when
+    the per-shard element count is not a multiple of 32.  Per-bit
+    (a, b, c = a & b) relations and the XOR share split are positional, so
+    each shard's words are valid triples for its element slice — this is
+    what lets the mesh-native serve path shard the request batch over a
+    data axis inside ``shard_map`` (the ROADMAP data-axis item): shard i
+    of n runs the protocol on batch rows [i*B/n, (i+1)*B/n) with exactly
+    these triples, reveal-identical to the unsharded replay.
+    """
+    E = bundle.b2a.a.lo.shape[-1]
+    if E % n_shards:
+        raise ValueError(
+            f"shard_relu_triples: {E} elements not divisible by "
+            f"{n_shards} data shards")
+    per = E // n_shards
+    lo_el, hi_el = data_index * per, (data_index + 1) * per
+
+    def sl_bin(t: BinTriple) -> BinTriple:
+        def f(words: jax.Array) -> jax.Array:
+            bits = shares.unpack_bits(words, E)
+            return shares.pack_bits(bits[..., lo_el:hi_el])
+        return BinTriple(f(t.a), f(t.b), f(t.c))
+
+    def sl_arith(t: ArithTriple) -> ArithTriple:
+        def f(r: ring.Ring64) -> ring.Ring64:
+            return ring.Ring64(r.lo[..., lo_el:hi_el], r.hi[..., lo_el:hi_el])
+        return ArithTriple(f(t.a), f(t.b), f(t.c))
+
+    if isinstance(bundle.bin_levels, BinTriple):     # dense: (L, P, 2w, W)
+        bin_levels = sl_bin(bundle.bin_levels)
+    else:                                            # cone: ragged per level
+        bin_levels = tuple(sl_bin(t) for t in bundle.bin_levels)
+    return ReluTriples(sl_bin(bundle.bin_init), bin_levels,
+                       sl_arith(bundle.b2a), sl_arith(bundle.mult))
+
+
+def shard_pool(pool: Sequence[Optional["ReluTriples"]],
+               n_shards: int) -> List[Optional["ReluTriples"]]:
+    """Stack per-data-shard slices of every bundle on a NEW leading axis.
+
+    The result has the same pool structure, but each leaf carries a
+    leading ``n_shards`` dimension holding that shard's element slice —
+    exactly what ``PrivateModel.serve_step(mesh, data_axis=...)`` wants as
+    its ``triples`` input: the shard_map places the data axis on that
+    leading dim (``pool_party_specs(..., data_axis=...)``), so each data
+    shard pops its own bit-level slice while the party dim stays where the
+    structural derivation says it is.
+    """
+
+    def stack(bundle):
+        if bundle is None:
+            return None
+        slices = [shard_relu_triples(bundle, i, n_shards)
+                  for i in range(n_shards)]
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *slices)
+
+    return [stack(b) for b in pool]
+
+
 def pool_party_specs(pool: Sequence[Optional["ReluTriples"]],
-                     party_axis: str = "party") -> List:
+                     party_axis: str = "party",
+                     data_axis: Optional[str] = None) -> List:
     """Party-dim ``PartitionSpec`` pytree for an offline triple pool.
 
     The party dimension's position is fixed by each member's *structure*
@@ -185,13 +253,22 @@ def pool_party_specs(pool: Sequence[Optional["ReluTriples"]],
     per leaf, so it drops straight into ``shard_map`` ``in_specs`` or maps
     to ``NamedSharding``s for jit input specs (see
     ``launch.serve.mpc_input_specs``).
+
+    With ``data_axis``, the pool is the *data-sharded* layout produced by
+    ``shard_pool``: every leaf gained a leading data-shard dimension, so
+    the data axis lands on dim 0 and the structural party positions shift
+    one to the right.
     """
     from jax.sharding import PartitionSpec
+
+    off = 0 if data_axis is None else 1
 
     def at(party_dim: int):
         def spec(leaf):
             s = [None] * len(leaf.shape)
-            s[party_dim] = party_axis
+            s[party_dim + off] = party_axis
+            if data_axis is not None:
+                s[0] = data_axis
             return PartitionSpec(*s)
         return lambda tree: jax.tree_util.tree_map(spec, tree)
 
@@ -287,20 +364,80 @@ class TriplePool:
     """
 
     def __init__(self, bundles: Iterable[Optional[ReluTriples]]):
-        self._iter = iter(bundles)
+        self._bundles = list(bundles)
         self.consumed = 0
 
     def relu_triples(self, n_elements: int, width: int,
                      cone: bool = False) -> Optional[ReluTriples]:
-        try:
-            tri = next(self._iter)
-        except StopIteration:
+        if self.consumed >= len(self._bundles):
             raise RuntimeError(
                 f"TriplePool exhausted after {self.consumed} ReLU calls — "
                 "the pool must hold one bundle per ReLU call per stream "
                 "(see Plan.triple_specs / beaver.gen_plan_triples)")
+        tri = self._bundles[self.consumed]
         self.consumed += 1
         return tri
+
+    def shard(self, data_index: int, n_shards: int) -> "TriplePool":
+        """Data shard ``data_index``'s pool: every not-yet-consumed bundle
+        sliced on the element axis (``shard_relu_triples``; party dim
+        untouched, bit-level split).  This pool is left untouched, so one
+        call per shard index yields ``n_shards`` pools that together cover
+        exactly the unsharded replay."""
+        return TriplePool([
+            None if b is None else shard_relu_triples(b, data_index, n_shards)
+            for b in self._bundles[self.consumed:]])
+
+
+class TripleBudgetExceeded(RuntimeError):
+    """A metered tenant asked for more triple material than its budget."""
+
+
+class MeteredProvider:
+    """Per-tenant triple metering: wraps any ``TripleProvider``, counts
+    what each ReLU call *requires* (bundles and DReLU elements — the
+    offline-TTP material a real deployment would bill for), and optionally
+    enforces an element budget.
+
+    Width-0 (culled) and zero-element calls consume nothing, exactly as
+    the providers themselves treat them.  The serving engine gives every
+    tenant its own ``MeteredProvider`` so concurrent tenants sharing one
+    micro-batch still have separately attributable (and cappable) triple
+    consumption.
+
+    Example::
+
+        provider = MeteredProvider(InlineTTP(), budget_elements=10_000)
+        provider.relu_triples(4096, 8)        # meters 4096 elements
+        provider.consumed_elements            # -> 4096
+    """
+
+    def __init__(self, base: Optional[TripleProvider] = None,
+                 budget_elements: Optional[int] = None):
+        self.base = base if base is not None else InlineTTP()
+        self.budget_elements = budget_elements
+        self.consumed_elements = 0
+        self.consumed_bundles = 0
+
+    @property
+    def remaining_elements(self) -> Optional[int]:
+        if self.budget_elements is None:
+            return None
+        return max(0, self.budget_elements - self.consumed_elements)
+
+    def relu_triples(self, n_elements: int, width: int,
+                     cone: bool = False) -> Optional[ReluTriples]:
+        if width == 0 or n_elements == 0:
+            return self.base.relu_triples(n_elements, width, cone=cone)
+        if (self.budget_elements is not None
+                and self.consumed_elements + n_elements > self.budget_elements):
+            raise TripleBudgetExceeded(
+                f"triple budget exhausted: {self.consumed_elements} of "
+                f"{self.budget_elements} elements consumed, next call needs "
+                f"{n_elements}")
+        self.consumed_bundles += 1
+        self.consumed_elements += n_elements
+        return self.base.relu_triples(n_elements, width, cone=cone)
 
 
 class EagerTTP(TriplePool):

@@ -307,3 +307,26 @@ def simulate(specs: Iterable, cone: bool = False,
                               if p in contrib)))
     live = tuple((n, w) for n, w in groups if n and w)
     return Schedule(tuple(slots), live)
+
+
+def simulate_merged(request_calls: Sequence[Sequence], cone: bool = False,
+                    auto_batch: bool = True) -> Schedule:
+    """Fused timeline of a *merged micro-batch*: N concurrent request
+    replays advancing call-by-call in lockstep.
+
+    ``request_calls[r]`` is request r's replay as a sequence of per-call
+    specs — ``(n_elements, width)`` or ``(n_elements, width, batch_key)``,
+    i.e. ``api.Plan.call_specs()``.  Call j of the merged batch runs every
+    request's j-th ReLU call in ONE ``relu_many`` lockstep (sibling
+    payloads coalesced; identical batch keys merged when ``auto_batch``),
+    so the batch pays max-over-requests rounds per call instead of the
+    sum — this is the serving engine's execution order and the latency
+    query its batching policy closes batches on.  Requests with fewer
+    calls simply drop out of later call slots.
+    """
+    n_calls = max((len(calls) for calls in request_calls), default=0)
+    total = Schedule.empty()
+    for j in range(n_calls):
+        specs = [calls[j] for calls in request_calls if j < len(calls)]
+        total = total + simulate(specs, cone=cone, auto_batch=auto_batch)
+    return total

@@ -77,7 +77,8 @@ def greedy_decode_loop(params, cfg: ArchConfig, cache, first_token,
 
 def make_mpc_serve_step(rcfg: ResNetConfig, hb: Optional[HBConfig],
                         cone: bool = False, mesh=None,
-                        party_axis: str = "party"):
+                        party_axis: str = "party",
+                        data_axis: Optional[str] = None):
     """Returns step(params, lo, hi, triples, key) -> (lo, hi) logits shares.
 
     lo/hi: Ring64 limbs of the input shares, shape (2, B, 3, H, W).
@@ -88,13 +89,45 @@ def make_mpc_serve_step(rcfg: ResNetConfig, hb: Optional[HBConfig],
     splits each exchange; with a mesh carrying a party axis the replay is
     mesh-native — it runs inside ``shard_map`` over the party axis and
     every fused protocol round lowers to exactly one collective-permute
-    (see ``PrivateModel.serve_step``).
+    (see ``PrivateModel.serve_step``).  ``data_axis`` additionally shards
+    the request batch over that mesh axis; ``triples`` must then be the
+    data-sharded pool from ``beaver.shard_pool(pool,
+    mesh.shape[data_axis])``.
     """
     model = api.compile(None, None, rcfg,
                         api.Plan.from_hb(resnet.hb_or_exact(hb, rcfg),
                                          cone=cone, name=rcfg.name),
                         api.Session())
-    return model.serve_step(mesh, party_axis=party_axis)
+    return model.serve_step(mesh, party_axis=party_axis, data_axis=data_axis)
+
+
+def make_inference_engine(params, rcfg: ResNetConfig,
+                          hb: Optional[HBConfig] = None, *,
+                          example_batch: int = 2, cone: bool = False,
+                          session=None, policy=None, **engine_kw):
+    """Request-level serving engine over a ResNet config (the paper's
+    workload) — see ``repro.serve.InferenceEngine``.
+
+    Traces the plan at ``example_batch`` (other request shapes are traced
+    on demand into the engine's plan cache) and binds the HummingBird
+    assignment ``hb`` (exact 64-bit when None).
+
+    Example::
+
+        engine = make_inference_engine(params, RESNET_SMOKE, hb)
+        fut = engine.submit("tenant-a", X)
+        logits = fut.result().reveal()
+    """
+    from repro.serve import InferenceEngine
+
+    def afn(p, v, relu_fn=None):
+        return resnet.apply(p, v, rcfg, relu_fn=relu_fn)
+
+    plan = resnet.trace(params, rcfg, example_batch, cone=cone)
+    if hb is not None:
+        plan = plan.with_hb(HBConfig(hb.layers, plan.group_elements))
+    return InferenceEngine(afn, params, rcfg, plan, session, policy=policy,
+                           **engine_kw)
 
 
 def _triple_pool_shardings(pool, mesh, party_axis: str):

@@ -100,6 +100,40 @@ def _result(cfg: HBConfig, plan: Optional[Plan], **kw) -> SearchResult:
                         **kw)
 
 
+#: RTT at which serving latency is round-dominated (the paper's §5.2 WAN
+#: preset is 20 ms; LAN is 50 us — three orders below the threshold).
+ROUNDS_DOMINATED_RTT_S = 1e-3
+
+
+def _resolve_preset(network: Union[NetworkPreset, str, None]) -> NetworkPreset:
+    if network is None:
+        network = LAN
+    return NETWORKS[network] if isinstance(network, str) else network
+
+
+def _ordered_bit_choices(bit_choices: Sequence[int], objective: str,
+                         preset: NetworkPreset) -> List[int]:
+    """Exploration order of the per-group width choices.
+
+    Default (bytes objective, or latency on a LAN-class link): widest
+    first — the accuracy-optimistic order, dense configs establish a high
+    accuracy incumbent early so Early stop 2 prunes aggressively.
+
+    Latency objective on a rounds-dominated network (WAN-class RTT):
+    width-0 first, ascending — culling a ReLU group erases *all* of its
+    fused rounds, which under a 20 ms RTT dwarfs any byte saving a
+    narrower-but-nonzero window offers, so culling-heavy branches must
+    reach complete configs before the byte-cheap dense fallbacks are even
+    visited (the accuracy criterion still decides what is *kept*; the
+    order decides which equally-accurate config the tie-break sees first
+    and how early schedule-cheap incumbents start pruning).
+    """
+    chosen = sorted({int(w) for w in bit_choices})
+    if objective == "latency" and preset.rtt_s >= ROUNDS_DOMINATED_RTT_S:
+        return chosen
+    return list(reversed(chosen))
+
+
 def _objective_scorer(objective: str,
                       network: Union[NetworkPreset, str, None],
                       plan: Optional[Plan], group_elements: Sequence[int],
@@ -124,9 +158,7 @@ def _objective_scorer(objective: str,
     else:
         calls = list(enumerate(group_elements))
         calls = [(n, g) for g, n in calls]
-    if network is None:
-        network = LAN
-    preset = NETWORKS[network] if isinstance(network, str) else network
+    preset = _resolve_preset(network)
 
     def score(cfg: HBConfig) -> float:
         return simulator.config_objective(
@@ -196,8 +228,8 @@ def search_budget(apply_fn, params, xs, ys,
                   bit_choices: Optional[Sequence[int]] = None,
                   max_k: int = 28, objective: str = "bytes",
                   network: Union[NetworkPreset, str, None] = None,
-                  streams: int = 1,
-                  cone: Optional[bool] = None) -> SearchResult:
+                  streams: int = 1, cone: Optional[bool] = None,
+                  on_visit=None) -> SearchResult:
     """HummingBird-b: budgeted DFS with locally-optimal (k, m).
 
     ``bit_choices`` may include 0: the group's ReLU is then *culled*
@@ -216,6 +248,13 @@ def search_budget(apply_fn, params, xs, ys,
     decides which config *within* the budget is returned, and
     ``result.objective_value`` (= ``result.plan.estimate(network=...)``
     for traced plans) reports exactly what was optimized.
+
+    Exploration order follows ``_ordered_bit_choices``: widest-first by
+    default, but width-0-first under ``objective="latency"`` on a
+    rounds-dominated (WAN-class) network, where culling a group's rounds
+    beats any byte saving.  ``on_visit(cfg)`` — when given — is called
+    with every candidate ``HBConfig`` evaluated, in visit order (search
+    introspection; the WAN-ordering regression test hooks in here).
     """
     t0 = time.time()
     group_elements, plan = _groups_and_plan(group_elements)
@@ -228,10 +267,16 @@ def search_budget(apply_fn, params, xs, ys,
     base_cfg = HBConfig.exact(group_elements)
     base_acc = _eval(apply_fn, params, xs, ys, base_cfg, key)
     threshold = base_acc - acc_threshold_drop
-    bit_choices = sorted(bit_choices or (0, 4, 5, 6, 8, 10), reverse=True)
+    bit_choices = _ordered_bit_choices(bit_choices or (0, 4, 5, 6, 8, 10),
+                                       objective, _resolve_preset(network))
 
     best: dict = {"acc": -1.0, "metric": float("inf"), "layers": None}
     stats = {"visited": 0, "pruned": 0}
+
+    def _visit(cfg: HBConfig) -> None:
+        stats["visited"] += 1
+        if on_visit is not None:
+            on_visit(cfg)
 
     def local_best(prefix: List[HBLayer], g: int, width: int):
         """Locally-optimal (k, m) with k - m = width for group g."""
@@ -239,17 +284,17 @@ def search_budget(apply_fn, params, xs, ys,
             # culling: every k = m is the same identity layer
             cand = prefix + [HBLayer(k=0, m=0)] + \
                 [HBLayer() for _ in range(n_groups - g - 1)]
-            stats["visited"] += 1
-            return HBLayer(k=0, m=0), _eval(
-                apply_fn, params, xs, ys,
-                HBConfig(tuple(cand), tuple(group_elements)), key)
+            cfg = HBConfig(tuple(cand), tuple(group_elements))
+            _visit(cfg)
+            return HBLayer(k=0, m=0), _eval(apply_fn, params, xs, ys, cfg,
+                                            key)
         best_local = (None, -1.0)
         for k in range(width, max_k + 1):
             m = k - width
             cand = prefix + [HBLayer(k=k, m=m)] + \
                 [HBLayer() for _ in range(n_groups - g - 1)]
             cfg = HBConfig(tuple(cand), tuple(group_elements))
-            stats["visited"] += 1
+            _visit(cfg)
             acc = _eval(apply_fn, params, xs, ys, cfg, key)
             if acc > best_local[1]:
                 best_local = (HBLayer(k=k, m=m), acc)
@@ -258,6 +303,11 @@ def search_budget(apply_fn, params, xs, ys,
     def dfs(prefix: List[HBLayer], g: int, bits_used: float):
         if g == n_groups:
             cfg = HBConfig(tuple(prefix), tuple(group_elements))
+            # complete configs stay out of nodes_visited (historical
+            # counter counts local_best candidates only) but are visible
+            # to the introspection hook
+            if on_visit is not None:
+                on_visit(cfg)
             acc = _eval(apply_fn, params, xs, ys, cfg, key)
             if acc > best["acc"]:
                 best["acc"] = acc

@@ -1,0 +1,20 @@
+"""repro.serve — request-level serving over the fused round timeline.
+
+``repro.api`` compiles one model for one caller; this package serves
+*traffic*: an ``InferenceEngine`` accepts ``submit(tenant, x)`` requests
+into an admission queue, a schedule-driven ``BatchPolicy`` forms fused
+micro-batches (close when the predicted merged-timeline latency per
+request stops improving, or a deadline hits), and every batch executes
+its requests as sibling streams of one plan replay — N concurrent
+requests pay max-over-requests protocol rounds instead of the sum, with
+per-request PRNG forking and per-tenant triple metering keeping the
+execution bit-identical to serial per-request inference.
+
+See ``docs/serving.md`` for the architecture and ``engine.py`` for the
+execution contract.
+"""
+from .engine import (BatchPolicy, BatchReport, InferenceEngine, Request,
+                     RequestFuture)
+
+__all__ = ["InferenceEngine", "BatchPolicy", "BatchReport", "Request",
+           "RequestFuture"]

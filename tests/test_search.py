@@ -182,3 +182,43 @@ def test_finetune_runs_and_preserves_shapes(setup):
     same = jax.tree_util.tree_all(jax.tree_util.tree_map(
         lambda a, b: a.shape == b.shape, params, p2))
     assert same
+
+
+def test_ordered_bit_choices_wan_puts_culling_first():
+    """Exploration order is a pure function of (objective, network):
+    width-0 first only when latency is the objective on a
+    rounds-dominated (WAN-class) link."""
+    from repro.api.plan import LAN, WAN
+    from repro.search.engine import _ordered_bit_choices
+
+    assert _ordered_bit_choices((0, 5, 6), "latency", WAN) == [0, 5, 6]
+    assert _ordered_bit_choices((6, 0, 5), "latency", WAN) == [0, 5, 6]
+    assert _ordered_bit_choices((0, 5, 6), "latency", LAN) == [6, 5, 0]
+    assert _ordered_bit_choices((0, 5, 6), "bytes", WAN) == [6, 5, 0]
+
+
+def test_wan_latency_search_visits_culled_before_dense(setup):
+    """Satellite acceptance: under network=WAN the budgeted search
+    explores culling-heavy (width-0-first) bit choices, so a width-0
+    candidate is visited before any dense fallback; the default
+    (bytes/LAN) order is unchanged — widest first."""
+    afn, params, xs, ys, groups = setup
+
+    def run(**kw):
+        visited = []
+        search_budget(afn, params, xs[:32], ys[:32], groups,
+                      jax.random.PRNGKey(13), budget=8 / 64,
+                      bit_choices=(0, 5, 6), max_k=12,
+                      on_visit=visited.append, **kw)
+        return visited
+
+    wan = run(objective="latency", network="wan")
+    has_cull = [any(l.width == 0 for l in c.layers) for c in wan]
+    dense = [all(l.width > 0 for l in c.layers) for c in wan]
+    assert has_cull[0], "WAN latency search must try culling group 0 first"
+    assert has_cull.index(True) < dense.index(True)
+
+    lan = run(objective="latency", network="lan")
+    assert all(l.width > 0 for l in lan[0].layers)  # widest-first retained
+    default = run()
+    assert all(l.width > 0 for l in default[0].layers)
