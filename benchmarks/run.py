@@ -222,6 +222,129 @@ def quick(out_path: str = "BENCH_relu.json") -> dict:
     return results
 
 
+def chaos(out_path: str = "BENCH_relu.json") -> dict:
+    """``--chaos``: the canonical engine request mix under a seeded
+    ``FaultPlan`` — transient drops + a corrupted payload below the
+    resilient transport, one mid-replay party crash healed by the
+    engine's restart hook, and one deadline-shed request.  Asserts the
+    recovered outputs are bit-identical to a fault-free run of the SAME
+    mix, that the engine's failure accounting matches the injected plan
+    exactly, and demonstrates journal-based crash/resume.  Results merge
+    into BENCH_relu.json under ``"chaos"``; ``--check`` fails on any
+    recorded divergence."""
+    import jax
+    import numpy as np
+
+    from repro import api, errors
+    from repro.configs import RESNET_SMOKE
+    from repro.core import beaver, comm as comm_lib, faults, fixed, gmw
+    from repro.core import ring, shares
+    from repro.core.hummingbird import HBConfig, HBLayer
+    from repro.models import resnet
+    from repro.serve import InferenceEngine
+
+    rng = np.random.default_rng(0)
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+
+    def afn(p, v, relu_fn=None):
+        return resnet.apply(p, v, RESNET_SMOKE, relu_fn=relu_fn)
+
+    plan = api.trace_plan(afn, params, (2, 3, 8, 8), name="smoke")
+    plan = plan.with_hb(HBConfig(
+        tuple([HBLayer(k=21, m=13)] * (plan.n_groups - 1)
+              + [HBLayer(k=13, m=13)]), plan.group_elements))
+    mix = [(2, 3, 8, 8), (2, 3, 8, 8), (1, 3, 8, 8)]
+    xs = [rng.uniform(-0.5, 0.5, sh).astype(np.float32) for sh in mix]
+
+    def run_mix(session, **engine_kw):
+        engine = InferenceEngine(afn, params, RESNET_SMOKE, plan, session,
+                                 **engine_kw)
+        futs = [engine.submit(t, x) for t, x in zip("aba", xs)]
+        shed_fut = engine.submit("a", xs[0], deadline_s=0.0)
+        engine.flush()
+        outs = [ring.to_uint64_np(f.result().data) for f in futs]
+        return engine, outs, shed_fut
+
+    # fault-free baseline: same Session seed => same request keys
+    baseline, want, _ = run_mix(api.Session(key=0))
+    n_rounds = int(baseline.stats()["fused_rounds"])
+
+    # seeded chaos: transients within the measured fused timeline + one
+    # crash at a mid-replay round, healed by restarting the transport
+    fault_plan = faults.FaultPlan.seeded(
+        17, n_rounds, drops=2, corrupts=1,
+        crash_round=max(1, n_rounds // 2))
+    fic = faults.FaultInjectingComm(fault_plan)
+    rc = comm_lib.ResilientComm(fic, max_retries=3)
+    engine, got, shed_fut = run_mix(
+        api.Session(key=0, comm=rc),
+        on_party_crash=lambda e: fic.restart())
+
+    bit_identical = all(np.array_equal(a, b) for a, b in zip(got, want))
+    st = engine.stats()
+    shed_typed = False
+    try:
+        shed_fut.result()
+    except errors.DeadlineExceeded:
+        shed_typed = True
+
+    # journal-based crash/resume on a raw fused layer: crash mid-replay,
+    # snapshot at the barrier, restart with the journal mounted
+    import tempfile
+    E, k, m = 512, 21, 13
+    x = rng.uniform(-3.5, 3.5, E).astype(np.float32)
+    X = shares.share(jax.random.PRNGKey(7), fixed.encode_np(x))
+    tr = beaver.gen_relu_triples(jax.random.PRNGKey(8), E, k - m)
+    key = jax.random.PRNGKey(9)
+    ref = gmw.relu(key, X, tr, comm_lib.SimComm(), k=k, m=m)
+    crash_plan = faults.FaultPlan.seeded(0, 8, drops=0, corrupts=0,
+                                         crash_round=3)
+    jc = faults.JournaledComm(comm_lib.ResilientComm(
+        faults.FaultInjectingComm(crash_plan)))
+    resume_ok, replayed = False, 0
+    with tempfile.TemporaryDirectory() as snap_dir:
+        try:
+            gmw.relu(key, X, tr, comm_lib.CoalescingComm(jc), k=k, m=m)
+        except errors.PartyCrashed:
+            jc.snapshot(snap_dir)
+            journal = faults.RoundJournal.load(snap_dir)
+            jc2 = faults.JournaledComm(comm_lib.ResilientComm(),
+                                       journal=journal)
+            out = gmw.relu(key, X, tr, comm_lib.CoalescingComm(jc2),
+                           k=k, m=m)
+            replayed = jc2.replayed
+            resume_ok = bool(np.array_equal(ring.to_uint64_np(out),
+                                            ring.to_uint64_np(ref)))
+
+    entry = {
+        "fault_plan_seed": 17,
+        "injected": dict(fic.injected),
+        "bit_identical": bit_identical,
+        "transport_retries": rc.retries,
+        "engine_retries": int(st["retries"]),
+        "chaos_retries": rc.retries + int(st["retries"]),
+        "chaos_recovery_overhead_bytes": rc.resent_bytes,
+        "faults_recovered": int(st["faults_recovered"]),
+        "shed": int(st["shed"]),
+        "shed_typed": shed_typed,
+        "restarts": fic.restarts,
+        "resume_bit_identical": resume_ok,
+        "resume_replayed_rounds": replayed,
+    }
+    try:
+        with open(out_path) as f:
+            results = json.load(f)
+    except FileNotFoundError:
+        results = {}
+    results["chaos"] = entry
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(json.dumps({"chaos": entry}, indent=2, sort_keys=True))
+    assert bit_identical, "chaos run diverged from the fault-free outputs"
+    assert resume_ok, "journal resume diverged from the uninterrupted run"
+    return entry
+
+
 def check(path: str = "BENCH_relu.json") -> int:
     """Round-regression gate: fail (non-zero) when the measured fused
     engine used MORE swaps than the round schedule predicts — i.e. the
@@ -265,6 +388,32 @@ def check(path: str = "BENCH_relu.json") -> int:
             failures.append(
                 f"multigroup: mesh-lowered collective bytes {mesh_bytes} "
                 f"!= schedule-predicted {mg.get('sched_bytes_pred')}")
+    # chaos gate (present once --chaos ran): recovery must be invisible —
+    # bit-identical outputs, and every recovery action accounted against
+    # the injected plan exactly (transients healed by re-send, the crash
+    # by exactly one engine batch retry after restart)
+    ch = data.get("chaos")
+    if ch is not None:
+        inj = ch.get("injected", {})
+        transient = sum(inj.get(k, 0) for k in ("drop", "stall", "corrupt"))
+        if not ch.get("bit_identical"):
+            failures.append("chaos: recovered engine outputs diverged from "
+                            "the fault-free run")
+        if not ch.get("resume_bit_identical"):
+            failures.append("chaos: journal crash/resume outputs diverged "
+                            "from the uninterrupted run")
+        if ch.get("transport_retries") != transient:
+            failures.append(
+                f"chaos: {ch.get('transport_retries')} transport re-sends "
+                f"!= {transient} injected transient faults")
+        if ch.get("engine_retries") != inj.get("crash", 0):
+            failures.append(
+                f"chaos: {ch.get('engine_retries')} engine batch retries "
+                f"!= {inj.get('crash', 0)} injected crashes")
+        if ch.get("shed") != 1 or not ch.get("shed_typed"):
+            failures.append("chaos: deadline shed not counted/typed "
+                            f"(shed={ch.get('shed')}, "
+                            f"typed={ch.get('shed_typed')})")
     if failures:
         for msg in failures:
             print(f"ROUND-REGRESSION: {msg}", file=sys.stderr)
@@ -278,6 +427,12 @@ def check(path: str = "BENCH_relu.json") -> int:
           + (f"; mesh HLO census {mesh_rounds} collective-permutes / "
              f"{mesh_bytes} B == schedule" if mesh_rounds is not None
              else " (no mesh census: single device)"))
+    if ch is not None:
+        print(f"chaos gate OK: bit-identical under "
+              f"{sum(ch['injected'].values())} injected faults "
+              f"({ch['injected']}), {ch['chaos_retries']} retries, "
+              f"{ch['chaos_recovery_overhead_bytes']} B recovery overhead, "
+              f"resume replayed {ch['resume_replayed_rounds']} rounds")
     return 0
 
 
@@ -315,6 +470,11 @@ def main() -> None:
                     help="only run benchmark modules whose name contains this")
     ap.add_argument("--quick", action="store_true",
                     help="CPU-sim ReLU perf tracker; writes BENCH_relu.json")
+    ap.add_argument("--chaos", action="store_true",
+                    help="chaos gate: re-run the engine mix under a seeded "
+                         "FaultPlan (drops, a corrupt payload, a mid-replay "
+                         "crash), assert bit-identical recovery, and merge "
+                         "the accounting into BENCH_relu.json['chaos']")
     ap.add_argument("--check", action="store_true",
                     help="round-regression gate over an existing "
                          "BENCH_relu.json: exit 1 when measured fused swaps "
@@ -338,9 +498,11 @@ def main() -> None:
         gantt()
     if args.quick:
         quick(args.out)
+    if args.chaos:
+        chaos(args.out)
     if args.check:
         sys.exit(check(args.out))
-    if args.gantt or args.quick:
+    if args.gantt or args.quick or args.chaos:
         return
     from benchmarks import (bench_accuracy, bench_breakdown, bench_comm,
                             bench_e2e, bench_roofline, bench_search)

@@ -17,6 +17,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 
+from repro import errors
 from repro.core import beaver, comm as comm_lib, ring
 from repro.core.mpc_tensor import MPCTensor, relu_many
 from .plan import Plan
@@ -55,7 +56,7 @@ def resolve_mpc_forward(cfg) -> Callable:
     for klass in type(cfg).__mro__:
         if klass in _MPC_FORWARDS:
             return _MPC_FORWARDS[klass]
-    raise KeyError(
+    raise errors.UnregisteredModel(
         f"no MPC forward registered for {type(cfg).__name__}; call "
         "repro.api.register_mpc_forward or pass mpc_forward= to compile")
 

@@ -72,3 +72,36 @@ class Session:
                                         cone=plan.cone, requests=requests,
                                         streams=streams)
         return self
+
+    def resilient(self, *, max_retries: int = 3,
+                  timeout_s: Optional[float] = None,
+                  backoff_s: float = 0.0, backoff_cap_s: float = 1.0,
+                  fault_plan=None, journal=None) -> "Session":
+        """Wrap this session's comm in the resilient transport stack
+        (``docs/robustness.md``): framed retry/backoff over the current
+        backend, with optional deterministic fault injection below it and
+        an optional round journal above it for crash/resume.
+
+        Stack (bottom up):
+        ``base -> FaultInjectingComm? -> ResilientComm -> JournaledComm?``
+        — the engine/``run_streams`` then coalesce on top, so every fused
+        round is ONE framed exchange and re-sends never add rounds.
+
+        Example::
+
+            plan = faults.FaultPlan.seeded(7, n_rounds=40)
+            session = api.Session(key=0).resilient(fault_plan=plan)
+        """
+        comm = self.comm
+        if fault_plan is not None:
+            from repro.core import faults as faults_lib
+            comm = faults_lib.FaultInjectingComm(fault_plan, comm)
+        comm = comm_lib.ResilientComm(comm, max_retries=max_retries,
+                                      timeout_s=timeout_s,
+                                      backoff_s=backoff_s,
+                                      backoff_cap_s=backoff_cap_s)
+        if journal is not None:
+            from repro.core import faults as faults_lib
+            comm = faults_lib.JournaledComm(comm, journal=journal)
+        self.comm = comm
+        return self

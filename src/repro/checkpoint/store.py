@@ -78,6 +78,17 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def load_manifest(ckpt_dir: str, step: Optional[int] = None) -> Dict:
+    """The manifest dict of a committed checkpoint, without loading any
+    arrays — lets a caller learn the leaf layout before building the
+    ``tree_like`` template that ``restore`` requires."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    return msgpack.unpackb((d / "manifest.msgpack").read_bytes())
+
+
 def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
             shardings: Any = None):
     """Restore into the structure of `tree_like`; re-shards with

@@ -14,6 +14,8 @@ from typing import Iterable, List, Optional, Protocol, Sequence, Tuple, runtime_
 import jax
 import jax.numpy as jnp
 
+from repro import errors
+
 from . import ring, schedule as schedule_lib, shares
 from .schedule import n_levels  # noqa: F401  (canonical home: core.schedule)
 
@@ -311,10 +313,22 @@ class TripleProvider(Protocol):
     own PRNG key" (the sim-backend default, bit-identical to the historical
     ``triples=None`` path).  Width-0 (culled) and zero-element calls must
     return None — they consume nothing.
+
+    Providers additionally expose ``checkpoint() -> token`` /
+    ``rollback(token)`` so the serving engine can retry a faulted batch
+    with the provider's stream position restored — the retried batch
+    draws the SAME triples (bit-identical retry) and a tenant is never
+    billed twice for one request.
     """
 
     def relu_triples(self, n_elements: int, width: int,
                      cone: bool = False) -> Optional[ReluTriples]:
+        ...
+
+    def checkpoint(self):
+        ...
+
+    def rollback(self, token) -> None:
         ...
 
 
@@ -326,6 +340,12 @@ class InlineTTP:
     def relu_triples(self, n_elements: int, width: int,
                      cone: bool = False) -> None:
         return None
+
+    def checkpoint(self) -> None:          # stateless: nothing to restore
+        return None
+
+    def rollback(self, token) -> None:
+        pass
 
 
 class StreamingTTP:
@@ -350,6 +370,12 @@ class StreamingTTP:
         self._key, k = jax.random.split(self._key)
         return gen_relu_triples(k, n_elements, width, cone=cone)
 
+    def checkpoint(self):
+        return self._key
+
+    def rollback(self, token) -> None:
+        self._key = token
+
 
 class TriplePool:
     """Precomputed pool consumed in call order (the mesh-serving path:
@@ -370,13 +396,19 @@ class TriplePool:
     def relu_triples(self, n_elements: int, width: int,
                      cone: bool = False) -> Optional[ReluTriples]:
         if self.consumed >= len(self._bundles):
-            raise RuntimeError(
+            raise errors.TriplePoolExhausted(
                 f"TriplePool exhausted after {self.consumed} ReLU calls — "
                 "the pool must hold one bundle per ReLU call per stream "
                 "(see Plan.triple_specs / beaver.gen_plan_triples)")
         tri = self._bundles[self.consumed]
         self.consumed += 1
         return tri
+
+    def checkpoint(self) -> int:
+        return self.consumed
+
+    def rollback(self, token: int) -> None:
+        self.consumed = token
 
     def shard(self, data_index: int, n_shards: int) -> "TriplePool":
         """Data shard ``data_index``'s pool: every not-yet-consumed bundle
@@ -389,8 +421,10 @@ class TriplePool:
             for b in self._bundles[self.consumed:]])
 
 
-class TripleBudgetExceeded(RuntimeError):
-    """A metered tenant asked for more triple material than its budget."""
+# Canonical home is repro.errors (still a RuntimeError subclass, so every
+# historical `except RuntimeError` / `pytest.raises` call site holds).
+TripleBudgetExceeded = errors.TripleBudgetExceeded
+TriplePoolExhausted = errors.TriplePoolExhausted
 
 
 class MeteredProvider:
@@ -438,6 +472,18 @@ class MeteredProvider:
         self.consumed_bundles += 1
         self.consumed_elements += n_elements
         return self.base.relu_triples(n_elements, width, cone=cone)
+
+    def checkpoint(self):
+        """Meter counters + the base provider's own stream position, so a
+        rolled-back retry re-draws identical triples and bills once."""
+        base_ckpt = getattr(self.base, "checkpoint", lambda: None)()
+        return (self.consumed_elements, self.consumed_bundles, base_ckpt)
+
+    def rollback(self, token) -> None:
+        self.consumed_elements, self.consumed_bundles, base_ckpt = token
+        rollback = getattr(self.base, "rollback", None)
+        if rollback is not None:
+            rollback(base_ckpt)
 
 
 class EagerTTP(TriplePool):

@@ -27,14 +27,28 @@ Round-fused engine support (see core/gmw.py):
   and concatenates everything into ONE ``swap`` on the base backend, then
   hands each caller its slice back.  This is what lets N concurrent ReLU
   groups share communication rounds instead of paying one round each.
+
+Resilient transport (see docs/robustness.md):
+
+- ``ResilientComm``: per-round framing (round sequence + checksum words
+  appended to the flattened uint32 buffer), corruption/desync detection,
+  and recovery by idempotent re-send with timeout + bounded exponential
+  backoff.  Raises the typed ``repro.errors`` comm failures only after the
+  retry budget is exhausted.  Sim/eager backends only (verification needs
+  concrete values) — the mesh backend runs inside jit and stays unframed.
 """
 from __future__ import annotations
 
-from typing import Any, List, Tuple
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
+
+from repro import errors
+from .schedule import FRAME_BYTES, FRAME_WORDS
 
 _U32 = jnp.uint32
 
@@ -247,3 +261,182 @@ class CoalescingComm:
 
     def party_slice(self, full: jax.Array) -> jax.Array:
         return self.base.party_slice(full)
+
+
+# ---------------------------------------------------------------------------
+# Resilient transport: framing + detection + retry/backoff
+# ---------------------------------------------------------------------------
+
+_CKSUM_MULT = np.uint64(2654435761)          # Knuth's multiplicative hash
+_SEQ_MIX = np.uint64(0x9E3779B1)
+_U32_MASK = np.uint64(0xFFFFFFFF)
+
+
+def frame_checksum(words, seq: int) -> np.ndarray:
+    """Per-party checksum of a (P, n) uint32 wire buffer under round seq.
+
+    Position-weighted multiplicative mix: a flip of any single word (or a
+    swap of two words) changes the sum by a nonzero odd multiple mod 2^32,
+    so single-word corruption is always detected; ``seq`` is folded in so
+    a stale round's frame can never verify against the current round.
+    """
+    w = np.asarray(words, dtype=np.uint32).astype(np.uint64)
+    idx = (np.arange(w.shape[-1], dtype=np.uint64) * _CKSUM_MULT) & _U32_MASK
+    acc = (((w ^ idx) * _CKSUM_MULT) & _U32_MASK).sum(axis=-1) & _U32_MASK
+    return (acc ^ ((np.uint64(seq) * _SEQ_MIX) & _U32_MASK)).astype(np.uint32)
+
+
+class ResilientComm:
+    """Framed, self-healing transport wrapper over any eager base backend.
+
+    Every ``swap`` flattens its payload pytree into one (P, n) uint32
+    buffer and appends ``FRAME_WORDS`` framing words — the round sequence
+    number and a per-party checksum — before exchanging.  On receipt the
+    frame is verified: a sequence mismatch means the parties desynced
+    (e.g. a duplicated/stale delivery), a checksum mismatch means payload
+    corruption; either triggers an idempotent re-send of the SAME framed
+    buffer.  An attempt that raises a transient comm fault (injected by
+    ``core.faults.FaultInjectingComm`` today, a socket timeout under a
+    real transport) or that takes longer than ``timeout_s`` is likewise
+    retried, with bounded exponential backoff between attempts.  Only when
+    the per-round retry budget is exhausted does the typed error
+    (``errors.CommTimeout`` / ``PayloadCorrupted`` / ``PartyCrashed``)
+    propagate to the caller.
+
+    Composition: ``CoalescingComm(ResilientComm(base))`` — coalescing
+    above, so the whole fused round is ONE framed exchange and re-sends
+    never add protocol rounds (the CoalescingComm/schedule round counters
+    are untouched by retries).  ``core.schedule``'s ``Schedule.framed()``
+    prices the framing overhead, so measured ``round_bytes`` here equal
+    the framed schedule prediction exactly; failed attempts accumulate in
+    ``resent_bytes`` (recovery overhead), never in ``round_bytes``.
+
+    Counters: ``n_rounds``/``round_bytes``/``bytes_tx`` (successful framed
+    rounds), ``retries`` (failed attempts), ``recovered`` (rounds that
+    needed at least one retry), ``resent_bytes``, and ``faults_detected``
+    by kind ("timeout", "corrupt", "crash").
+    """
+
+    def __init__(self, base=None, *, max_retries: int = 3,
+                 timeout_s: Optional[float] = None,
+                 backoff_s: float = 0.0, backoff_cap_s: float = 1.0):
+        self.base = base if base is not None else SimComm()
+        self.n_parties = self.base.n_parties
+        self.max_retries = max_retries
+        self.timeout_s = timeout_s
+        self.backoff_s = backoff_s
+        self.backoff_cap_s = backoff_cap_s
+        self.reset()
+
+    def reset(self) -> None:
+        self._seq = 0
+        self.n_rounds = 0
+        self.round_bytes: List[int] = []
+        self.retries = 0
+        self.recovered = 0
+        self.resent_bytes = 0
+        self.faults_detected: Dict[str, int] = {
+            "timeout": 0, "corrupt": 0, "crash": 0}
+
+    @property
+    def bytes_tx(self) -> int:
+        return sum(self.round_bytes)
+
+    # -- framing ---------------------------------------------------------------
+    def _flatten(self, x) -> Tuple[jax.Array, List[jax.Array], Any]:
+        leaves, treedef = jax.tree_util.tree_flatten(x)
+        for leaf in leaves:
+            if leaf.dtype != _U32:
+                raise TypeError(
+                    f"ResilientComm payloads must be uint32, got {leaf.dtype}")
+        flat = [jnp.reshape(leaf, (leaf.shape[0], -1)) for leaf in leaves]
+        buf = jnp.concatenate(flat, axis=1) if len(flat) > 1 else flat[0]
+        return buf, leaves, treedef
+
+    def _frame(self, buf: jax.Array) -> jax.Array:
+        seq_col = jnp.full((buf.shape[0], 1), jnp.uint32(self._seq & 0xFFFFFFFF))
+        cksum = jnp.asarray(frame_checksum(buf, self._seq)).reshape(-1, 1)
+        return jnp.concatenate([buf, seq_col, cksum], axis=1)
+
+    def _verify(self, opened) -> np.ndarray:
+        """Checks the received frame; raises typed errors on mismatch and
+        returns the received payload words (host array) on success."""
+        got = np.asarray(opened, dtype=np.uint32)
+        payload, seq_col, cksum_col = (got[:, :-FRAME_WORDS], got[:, -2],
+                                       got[:, -1])
+        if not (seq_col == np.uint32(self._seq & 0xFFFFFFFF)).all():
+            raise errors.PayloadCorrupted(
+                f"round desync: expected seq {self._seq}, received "
+                f"{sorted(set(int(s) for s in seq_col))}")
+        want = frame_checksum(payload, self._seq)
+        if not (cksum_col == want).all():
+            bad = [p for p in range(got.shape[0]) if cksum_col[p] != want[p]]
+            raise errors.PayloadCorrupted(
+                f"checksum mismatch on round {self._seq} "
+                f"(party rows {bad}): payload corrupted in flight")
+        return payload
+
+    # -- the exchange ----------------------------------------------------------
+    def swap(self, x):
+        buf, leaves, treedef = self._flatten(x)
+        framed = self._frame(buf)
+        frame_cost = payload_bytes(framed)
+        attempt = 0
+        while True:
+            t0 = time.monotonic()
+            try:
+                opened = self.base.swap(framed)
+                if (self.timeout_s is not None
+                        and time.monotonic() - t0 > self.timeout_s):
+                    raise errors.CommTimeout(
+                        f"round {self._seq}: exchange stalled past "
+                        f"{self.timeout_s}s")
+                payload = self._verify(opened)
+                break
+            except errors.CommError as e:
+                kind = ("crash" if isinstance(e, errors.PartyCrashed) else
+                        "corrupt" if isinstance(e, errors.PayloadCorrupted)
+                        else "timeout")
+                self.faults_detected[kind] += 1
+                self.resent_bytes += frame_cost
+                # A crashed peer cannot be healed by a re-send: recovery
+                # is restart + journal resume, owned by the layer above.
+                if isinstance(e, errors.PartyCrashed):
+                    raise
+                if attempt >= self.max_retries:
+                    raise
+                self.retries += 1
+                attempt += 1
+                if self.backoff_s > 0:
+                    time.sleep(min(self.backoff_s * 2 ** (attempt - 1),
+                                   self.backoff_cap_s))
+        self.n_rounds += 1
+        self.round_bytes.append(frame_cost)
+        if attempt:
+            self.recovered += 1
+        self._seq += 1
+        out_leaves, off = [], 0
+        payload = jnp.asarray(payload)
+        for leaf in leaves:
+            n = leaf.size // leaf.shape[0]
+            out_leaves.append(payload[:, off:off + n].reshape(leaf.shape))
+            off += n
+        return jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+    def party_is(self, p: int, template: jax.Array) -> jax.Array:
+        return self.base.party_is(p, template)
+
+    def party_slice(self, full: jax.Array) -> jax.Array:
+        return self.base.party_slice(full)
+
+
+def find_resilient(comm) -> Optional[ResilientComm]:
+    """The ``ResilientComm`` inside a wrapper stack, if any (the serving
+    engine reads its recovery counters per batch)."""
+    seen = set()
+    while comm is not None and id(comm) not in seen:
+        seen.add(id(comm))
+        if isinstance(comm, ResilientComm):
+            return comm
+        comm = getattr(comm, "base", None)
+    return None

@@ -1,0 +1,274 @@
+"""Deterministic fault injection + round journaling: chaos as an input.
+
+``FaultInjectingComm`` is the chaos counterpart of ``CountingComm``: a
+transparent wrapper over any eager base backend that realizes a seeded,
+round-addressable ``FaultPlan`` — transient drops, stalls, payload
+bit-corruption, and party crashes — exactly where the plan says, and
+nowhere else.  Because both the protocol and the plan are deterministic,
+every chaos run is reproducible bit for bit, which is what lets the test
+suite and ``benchmarks/run.py --chaos`` assert that recovered executions
+equal fault-free ones exactly.
+
+Round addressing: ``FaultEvent.round`` indexes the comm's *clean-swap*
+counter — the cursor advances only when a round delivers uncorrupted and
+unfaulted, so a retried round consumes its one-shot event on the faulted
+attempt and the re-send passes.  In a serving run this counter is the
+global fused-round timeline (the same one ``core.schedule`` predicts),
+not a per-batch index.  A ``crash`` is persistent: every subsequent swap
+raises ``errors.PartyCrashed`` until ``restart()`` is called (the serving
+engine's ``on_party_crash`` hook, or the resume path below).
+
+``RoundJournal``/``JournaledComm`` implement round-level resume.  The
+journal records each completed round's opened wire payload; after a
+crash, a restarted party re-runs the SAME deterministic round generators
+with the journal mounted — recorded rounds replay from the journal
+without touching the wire, live execution resumes at the first
+unjournaled round, and the final shares are bit-identical to an
+uninterrupted run (the bit-exactness contract extended to interrupted
+executions).  Journals persist through ``checkpoint/store.py``'s
+torn-write-safe idiom (tmp dir + COMMITTED sentinel + atomic rename), so
+a crash *during* a snapshot can never leave a half-written journal.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import errors
+from repro.checkpoint import store
+
+from .comm import SimComm
+
+KINDS = ("drop", "stall", "corrupt", "crash")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.  ``round`` indexes the clean-swap counter of
+    the ``FaultInjectingComm`` realizing it (see module docstring)."""
+
+    round: int
+    kind: str                   # one of KINDS
+    delay_s: float = 0.0        # stall only: sleep before timing out
+    word: int = 0               # corrupt only: flat word index (mod size)
+    bit: int = 0                # corrupt only: which bit to flip
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic chaos schedule: a tuple of one-shot events (crash
+    excepted — it persists until ``restart()``)."""
+
+    events: Tuple[FaultEvent, ...] = ()
+
+    @classmethod
+    def seeded(cls, seed: int, n_rounds: int, *, drops: int = 1,
+               corrupts: int = 1, stalls: int = 0, stall_s: float = 0.0,
+               crash_round: Optional[int] = None) -> "FaultPlan":
+        """A reproducible plan: ``drops + corrupts + stalls`` transient
+        events on distinct rounds drawn without replacement from
+        ``range(n_rounds)``, plus an optional persistent crash."""
+        rng = np.random.default_rng(seed)
+        kinds = (["drop"] * drops + ["corrupt"] * corrupts
+                 + ["stall"] * stalls)
+        rng.shuffle(kinds)
+        n = min(len(kinds), max(n_rounds, 0))
+        rounds = (sorted(int(r) for r in
+                         rng.choice(n_rounds, size=n, replace=False))
+                  if n else [])
+        events = [
+            FaultEvent(round=r, kind=kind,
+                       delay_s=stall_s if kind == "stall" else 0.0,
+                       word=int(rng.integers(0, 2**31)),
+                       bit=int(rng.integers(0, 32)))
+            for r, kind in zip(rounds, kinds)]
+        if crash_round is not None:
+            events.append(FaultEvent(round=int(crash_round), kind="crash"))
+        return cls(tuple(sorted(events, key=lambda e: e.round)))
+
+    def events_at(self, r: int) -> Tuple[FaultEvent, ...]:
+        return tuple(e for e in self.events if e.round == r)
+
+    def count(self, kind: str) -> int:
+        return sum(1 for e in self.events if e.kind == kind)
+
+    @property
+    def n_transient(self) -> int:
+        """Events a ``ResilientComm`` retry absorbs (everything but crash)."""
+        return sum(1 for e in self.events if e.kind != "crash")
+
+
+def _flip_bit(opened: Any, ev: FaultEvent) -> Any:
+    """The delivered payload with one bit flipped in its first leaf —
+    in-flight corruption, deterministic position."""
+    leaves, treedef = jax.tree_util.tree_flatten(opened)
+    host = [np.asarray(leaf) for leaf in leaves]
+    flat = host[0].copy().reshape(-1)
+    i = ev.word % flat.size
+    flat[i] ^= flat.dtype.type(1) << flat.dtype.type(ev.bit % 32)
+    host[0] = flat.reshape(host[0].shape)
+    return treedef.unflatten([jnp.asarray(h) for h in host])
+
+
+class FaultInjectingComm:
+    """Realizes a ``FaultPlan`` over any eager base backend.
+
+    drop/stall  -> raise ``errors.CommTimeout`` (stall sleeps first, so a
+                   ``ResilientComm`` backoff schedule is actually paced)
+    corrupt     -> deliver the exchange with one bit flipped
+    crash       -> raise ``errors.PartyCrashed`` on this and EVERY later
+                   swap until ``restart()``
+
+    The clean-round cursor (``self.round``) advances only on unfaulted
+    delivery, so one-shot events are consumed by the faulted attempt and
+    the idempotent re-send goes through.  ``injected`` counts events by
+    kind as they are realized — the chaos gate asserts these against the
+    recovery counters upstream.
+    """
+
+    def __init__(self, plan: FaultPlan, base=None):
+        self.base = base if base is not None else SimComm()
+        self.plan = plan
+        self.n_parties = self.base.n_parties
+        self.round = 0
+        self.restarts = 0
+        self.injected: Dict[str, int] = {k: 0 for k in KINDS}
+        self._crashed: Optional[int] = None
+        self._consumed: set = set()
+
+    def restart(self) -> None:
+        """Revive a crashed party (models process restart).  Consumed
+        events stay consumed; the round cursor keeps its position on the
+        global timeline."""
+        self._crashed = None
+        self.restarts += 1
+
+    def swap(self, x):
+        if self._crashed is not None:
+            raise errors.PartyCrashed(
+                f"party down since round {self._crashed}; restart() first")
+        corrupt: Optional[FaultEvent] = None
+        for idx, ev in enumerate(self.plan.events):
+            if ev.round != self.round or idx in self._consumed:
+                continue
+            self._consumed.add(idx)
+            self.injected[ev.kind] += 1
+            if ev.kind == "crash":
+                self._crashed = self.round
+                raise errors.PartyCrashed(
+                    f"injected crash at round {self.round}")
+            if ev.kind == "stall":
+                if ev.delay_s > 0:
+                    time.sleep(ev.delay_s)
+                raise errors.CommTimeout(
+                    f"injected stall at round {self.round}")
+            if ev.kind == "drop":
+                raise errors.CommTimeout(
+                    f"injected drop at round {self.round}")
+            corrupt = ev                     # deliver, then damage it
+            break
+        opened = self.base.swap(x)
+        if corrupt is not None:
+            return _flip_bit(opened, corrupt)    # cursor does NOT advance
+        self.round += 1
+        return opened
+
+    def party_is(self, p: int, template: jax.Array) -> jax.Array:
+        return self.base.party_is(p, template)
+
+    def party_slice(self, full: jax.Array) -> jax.Array:
+        return self.base.party_slice(full)
+
+
+# ---------------------------------------------------------------------------
+# Round-level resume: journal + replaying comm
+# ---------------------------------------------------------------------------
+
+class RoundJournal:
+    """Opened wire payloads of completed rounds, in order (host arrays).
+
+    Persistence rides the checkpoint store's atomic-commit idiom: a
+    snapshot either lands whole (COMMITTED sentinel present) or not at
+    all, so resuming from a torn snapshot is impossible.
+    """
+
+    def __init__(self):
+        self.rounds: List[List[np.ndarray]] = []
+
+    def __len__(self) -> int:
+        return len(self.rounds)
+
+    def record(self, leaves) -> None:
+        self.rounds.append([np.asarray(leaf) for leaf in leaves])
+
+    def save(self, ckpt_dir: str) -> None:
+        flat = [a for rnd in self.rounds for a in rnd]
+        store.save(ckpt_dir, step=len(self.rounds), tree=flat,
+                   extra={"round_lens": [len(r) for r in self.rounds]})
+
+    @classmethod
+    def load(cls, ckpt_dir: str) -> "RoundJournal":
+        manifest = store.load_manifest(ckpt_dir)
+        lens = manifest["extra"]["round_lens"]
+        template = [np.zeros(1, np.uint32)] * sum(lens)
+        flat, _ = store.restore(ckpt_dir, template)
+        j = cls()
+        it = iter(flat)
+        for n in lens:
+            j.rounds.append([np.asarray(next(it)) for _ in range(n)])
+        return j
+
+
+class JournaledComm:
+    """Replay-through-journal transport wrapper.
+
+    Rounds already in the mounted journal are served from the record
+    without touching the wire (``replayed`` counts them); live rounds go
+    to ``base`` and are recorded on success.  Mount it ABOVE
+    ``ResilientComm`` so only verified payloads are journaled, and BELOW
+    ``CoalescingComm`` so one journal entry is one fused round.
+    """
+
+    def __init__(self, base=None, journal: Optional[RoundJournal] = None):
+        self.base = base if base is not None else SimComm()
+        self.journal = journal if journal is not None else RoundJournal()
+        self.n_parties = self.base.n_parties
+        self.cursor = 0
+        self.replayed = 0
+
+    def swap(self, x):
+        leaves, treedef = jax.tree_util.tree_flatten(x)
+        if self.cursor < len(self.journal):
+            rec = self.journal.rounds[self.cursor]
+            if len(rec) != len(leaves):
+                raise errors.PayloadCorrupted(
+                    f"journal round {self.cursor} holds {len(rec)} leaves "
+                    f"but the payload has {len(leaves)}: journal does not "
+                    f"match this execution")
+            self.cursor += 1
+            self.replayed += 1
+            return treedef.unflatten([jnp.asarray(a) for a in rec])
+        opened = self.base.swap(x)
+        self.journal.record(jax.tree_util.tree_flatten(opened)[0])
+        self.cursor += 1
+        return opened
+
+    def snapshot(self, ckpt_dir: str) -> None:
+        """Persist the journal at the current round barrier (atomic)."""
+        self.journal.save(ckpt_dir)
+
+    def party_is(self, p: int, template: jax.Array) -> jax.Array:
+        return self.base.party_is(p, template)
+
+    def party_slice(self, full: jax.Array) -> jax.Array:
+        return self.base.party_slice(full)

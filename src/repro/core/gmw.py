@@ -66,13 +66,19 @@ def drive(gen, comm):
         return e.value
 
 
-def run_streams(comm, streams: Sequence) -> List:
+def run_streams(comm, streams: Sequence, on_round=None) -> List:
     """Advance N round generators in lockstep, coalescing each round.
 
     Every round, all pending streams' payloads are enqueued on a
     ``CoalescingComm`` and fired as ONE flattened exchange; streams that
     finish early (narrower rings -> fewer levels) simply drop out.  Returns
     each stream's result, in order.
+
+    ``on_round(r)``, if given, fires after fused round ``r`` completes —
+    i.e. at the round barrier, once every live stream has absorbed the
+    exchange.  This is the snapshot/watchdog seam: a
+    ``JournaledComm.snapshot`` here makes the execution resumable from
+    round ``r``, and the serving engine hangs straggler detection off it.
     """
     cc = (comm if isinstance(comm, comm_lib.CoalescingComm)
           else comm_lib.CoalescingComm(comm))
@@ -83,6 +89,7 @@ def run_streams(comm, streams: Sequence) -> List:
             live[i] = (s, s.send(None))
         except StopIteration as e:  # zero-round stream
             results[i] = e.value
+    r = 0
     while live:
         handles = {i: cc.enqueue(payload) for i, (_, payload) in live.items()}
         opened = cc.flush()
@@ -93,6 +100,9 @@ def run_streams(comm, streams: Sequence) -> List:
             except StopIteration as e:
                 results[i] = e.value
         live = nxt
+        if on_round is not None:
+            on_round(r)
+        r += 1
     return results
 
 

@@ -51,8 +51,18 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 WORD_BYTES = 4        # packed u32 wire words
 RING_BYTES = 8        # one Z/2^64 element (two u32 limbs)
 
+#: Resilient-transport framing: ``comm.ResilientComm`` appends a round
+#: sequence word and a checksum word to every flushed round's flattened
+#: uint32 buffer (see its docstring).  Declared here — the import-light
+#: bottom of the stack — so the schedule can price the framed timeline
+#: (``Schedule.framed``) and ``--check`` still equates measured and
+#: predicted bytes when the resilient layer is in the stack.
+FRAME_WORDS = 2
+FRAME_BYTES = FRAME_WORDS * WORD_BYTES
+
 #: Protocol phases in timeline order (names match the paper's Figure 3
-#: categories and ``costmodel.CommCost.breakdown``).
+#: categories and ``costmodel.CommCost.breakdown``).  ``Schedule.framed``
+#: adds a fifth, synthetic "frame" phase on top of these.
 PHASES = ("others", "circuit", "b2a", "mult")
 
 
@@ -174,11 +184,11 @@ class Schedule:
 
     def phase_bytes(self) -> Dict[str, int]:
         """Total bytes per protocol phase (the paper's Figure 3 categories;
-        always carries all four keys)."""
+        always carries all four keys, plus "frame" on framed schedules)."""
         out = {p: 0 for p in PHASES}
         for slot in self.slots:
             for phase, b in slot.phase_bytes:
-                out[phase] += b
+                out[phase] = out.get(phase, 0) + b
         return out
 
     # -- latency ---------------------------------------------------------------
@@ -194,6 +204,25 @@ class Schedule:
         """
         wire = 2 * self.bytes_tx * 8 / bandwidth_bps
         return wire + self.n_rounds * rtt_s + compute_s
+
+    # -- resilient-transport framing -------------------------------------------
+    def framed(self, frame_bytes: int = FRAME_BYTES) -> "Schedule":
+        """The same timeline as seen on a resilient transport: every fused
+        round's exchange carries ``frame_bytes`` of framing (round sequence
+        + checksum words, ``comm.ResilientComm``) on top of its payload.
+
+        Round count, ordering and phase structure are untouched — framing
+        is pure per-round overhead, priced as its own "frame" phase so
+        ``phase_bytes()``/``gantt()`` show exactly what resilience costs.
+        This is what ``benchmarks/run.py --chaos`` compares the measured
+        ``ResilientComm.round_bytes`` against (re-sends excluded: they are
+        recovery overhead, accounted separately).
+        """
+        slots = tuple(
+            RoundSlot(bytes_tx=s.bytes_tx + frame_bytes, parts=s.parts,
+                      phase_bytes=s.phase_bytes + (("frame", frame_bytes),))
+            for s in self.slots)
+        return Schedule(slots, self.groups)
 
     # -- rendering -------------------------------------------------------------
     def gantt(self, col: int = 6) -> str:
@@ -224,10 +253,13 @@ class Schedule:
                 return f"{b // 1024}k"
             return f"{b / (1024 * 1024):.1f}M"
 
-        label = max(len(p) for p in PHASES + ("bytes/pty", "round"))
+        extra = tuple(p for s in self.slots for p, _ in s.phase_bytes
+                      if p not in PHASES)
+        phases = PHASES + tuple(dict.fromkeys(extra))   # e.g. framed: "frame"
+        label = max(len(p) for p in phases + ("bytes/pty", "round"))
         lines = ["round".ljust(label) + " |"
                  + "".join(cell(str(r + 1)) for r in range(self.n_rounds))]
-        for phase in PHASES:
+        for phase in phases:
             contrib = [dict(s.phase_bytes).get(phase, 0) for s in self.slots]
             if not any(contrib):
                 continue

@@ -45,11 +45,13 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro import errors
 from repro.core import beaver, comm as comm_lib, ring, schedule as schedule_lib
 from repro.core.mpc_tensor import MPCTensor
 from repro.api.compile import PrivateModel, compile as compile_model
 from repro.api.plan import LAN, NETWORKS, NetworkPreset, Plan, trace_plan
 from repro.api.session import Session
+from repro.runtime.watchdog import StragglerWatchdog
 
 
 def _next_pow2(n: int) -> int:
@@ -121,6 +123,7 @@ class Request:
     arrival_s: float
     shape: Tuple[int, ...]             # bucketed execution shape
     out_batch: int                     # caller's true batch (pre-padding)
+    deadline_s: Optional[float] = None  # completion budget from arrival
 
 
 class RequestFuture:
@@ -141,9 +144,34 @@ class RequestFuture:
     def done(self) -> bool:
         return self._done
 
-    def result(self) -> MPCTensor:
+    def result(self, timeout_s: Optional[float] = None) -> MPCTensor:
+        """The output shares, draining the engine if needed.
+
+        With ``timeout_s=None`` (historical behaviour) the engine is
+        flushed once — every queued batch runs to completion.  With a
+        timeout, the engine is *polled* instead (batching policy and
+        ``max_wait_s`` deadlines respected) until the request resolves or
+        the timeout expires, and an unresolved request raises
+        ``errors.ResultTimeout`` instead of spinning forever on a wedged
+        engine.
+        """
         if not self._done:
-            self._engine.flush()
+            if timeout_s is None:
+                self._engine.flush()
+            else:
+                deadline = time.monotonic() + timeout_s
+                while not self._done:
+                    self._engine.poll()
+                    if self._done:
+                        break
+                    if time.monotonic() >= deadline:
+                        raise errors.attach_request(
+                            errors.ResultTimeout(
+                                f"request {self.request.id} unresolved "
+                                f"after {timeout_s}s (engine queue: "
+                                f"{self._engine.pending} pending)"),
+                            self.request.id, self.request.tenant)
+                    time.sleep(min(0.005, timeout_s / 10.0))
         if self._exc is not None:
             raise self._exc
         if not self._done:
@@ -157,6 +185,10 @@ class RequestFuture:
         self._value, self.report, self._done = value, report, True
 
     def _fail(self, exc: BaseException) -> None:
+        # stamp the originating request's identity, first failure wins (a
+        # batch-wide exception is shared by every future it failed)
+        if getattr(exc, "request_id", None) is None:
+            errors.attach_request(exc, self.request.id, self.request.tenant)
         self._exc, self._done = exc, True
 
 
@@ -174,6 +206,9 @@ class BatchReport:
     serial_rounds: int                # sum of per-request rounds (unfused)
     predicted_latency_s: float        # merged timeline under policy.network
     waits_s: Tuple[float, ...]        # per-request queue wait at execution
+    retries: int = 0                  # batch re-executions on comm faults
+    faults_recovered: int = 0         # transport rounds healed by re-send
+    shed: int = 0                     # requests deadline-shed at admission
 
     @property
     def n_requests(self) -> int:
@@ -222,7 +257,11 @@ class InferenceEngine:
                  provider_factory: Optional[Callable[[str], object]] = None,
                  tenant_budgets: Optional[Dict[str, int]] = None,
                  default_budget: Optional[int] = None,
-                 report_history: int = 1024):
+                 report_history: int = 1024,
+                 max_batch_retries: int = 2,
+                 on_party_crash: Optional[Callable] = None,
+                 on_straggler: Optional[Callable] = None,
+                 straggler_factor: float = 3.0):
         self.policy = policy if policy is not None else BatchPolicy()
         self.session = session if session is not None else Session(key=0)
         self.model: PrivateModel = compile_model(
@@ -257,7 +296,21 @@ class InferenceEngine:
         self.reports: Deque[BatchReport] = collections.deque(
             maxlen=report_history)
         self._totals = {"requests": 0, "batches": 0, "fused_rounds": 0,
-                        "serial_rounds": 0}
+                        "serial_rounds": 0, "retries": 0, "shed": 0,
+                        "faults_recovered": 0}
+        #: resilience: a retryable comm fault (ResilientComm's retry
+        #: budget exhausted on a transient) re-executes the whole batch —
+        #: same request keys, providers rolled back, so the retried
+        #: results are bit-identical and tenants are billed once.  A
+        #: PartyCrashed batch retries only if ``on_party_crash`` revives
+        #: the transport (e.g. FaultInjectingComm.restart).
+        self.max_batch_retries = max_batch_retries
+        self.on_party_crash = on_party_crash
+        #: slow-round detection: each executed batch's per-fused-round
+        #: wall time feeds the shared EWMA watchdog (same implementation
+        #: as the training loop's per-step straggler detector)
+        self.watchdog = StragglerWatchdog(factor=straggler_factor)
+        self._on_straggler = on_straggler
 
     # -- plan / lowering cache -------------------------------------------------
     def _cache_key(self, shape: Sequence[int]) -> Tuple:
@@ -273,7 +326,7 @@ class InferenceEngine:
         key = self._cache_key(shape)
         if key not in self._plan_cache:
             if self.model.apply_fn is None:
-                raise ValueError(
+                raise errors.ShapeMismatch(
                     f"request shape {tuple(shape)} has no traced plan and "
                     "the engine was built without apply_fn — submit only "
                     f"shape {self.plan.input_shape} or compile with the "
@@ -311,7 +364,8 @@ class InferenceEngine:
 
     # -- admission -------------------------------------------------------------
     def submit(self, tenant: str, x, *, request_id: Optional[int] = None,
-               arrival_s: Optional[float] = None) -> RequestFuture:
+               arrival_s: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> RequestFuture:
         """Enqueue one request; returns its future.
 
         ``x`` is the caller's secret-shared ``MPCTensor`` (a plain array is
@@ -319,6 +373,13 @@ class InferenceEngine:
         the request key).  ``request_id`` defaults to an auto-increment;
         pass an explicit id to make the request's protocol randomness
         independent of submission order (``Session.request_key``).
+
+        ``deadline_s`` is a completion budget measured from arrival: at
+        execution time a request whose schedule-predicted latency alone
+        (a provable lower bound — running it solo cannot be slower than
+        that) already overruns the remaining budget is *shed* — its
+        future fails with ``errors.DeadlineExceeded`` before a single
+        protocol round or triple is spent on it.
 
         The request's plan is resolved here (traced into the cache if the
         shape is new), so an unservable shape fails the *submit* call —
@@ -328,7 +389,8 @@ class InferenceEngine:
         if request_id is None:
             request_id = self._next_id
         if request_id in self._used_ids:
-            raise ValueError(f"request id {request_id} already submitted")
+            raise errors.DuplicateRequest(
+                f"request id {request_id} already submitted")
         self.plan_for_shape(x.shape)
         self._used_ids.add(request_id)
         self._next_id = max(self._next_id, request_id + 1)
@@ -350,7 +412,9 @@ class InferenceEngine:
         req = Request(id=request_id, tenant=tenant, x=x, key=key,
                       arrival_s=(time.monotonic() if arrival_s is None
                                  else float(arrival_s)),
-                      shape=bucket, out_batch=out_batch)
+                      shape=bucket, out_batch=out_batch,
+                      deadline_s=(None if deadline_s is None
+                                  else float(deadline_s)))
         fut = RequestFuture(self, req)
         self._futures[request_id] = fut
         self._queue.append(req)
@@ -426,12 +490,30 @@ class InferenceEngine:
 
     def _execute(self, batch: List[Request],
                  now_s: float) -> Optional[BatchReport]:
+        # deadline shedding first: a request whose schedule-predicted solo
+        # latency already overruns its remaining budget provably cannot
+        # finish in time — fail it typed, before reserving any triples
+        shed = 0
+        survivors: List[Request] = []
+        for r in batch:
+            if (r.deadline_s is not None
+                    and (now_s - r.arrival_s) + self._merged_latency([r])
+                    > r.deadline_s):
+                self._futures.pop(r.id)._fail(errors.DeadlineExceeded(
+                    f"request {r.id} (tenant {r.tenant!r}): "
+                    f"{now_s - r.arrival_s:.3f}s already queued and the "
+                    f"schedule-predicted replay alone overruns the "
+                    f"{r.deadline_s}s deadline — shed before execution"))
+                shed += 1
+                continue
+            survivors.append(r)
+        self._totals["shed"] += shed
         # pre-reserve tenant budgets so a mid-protocol budget error can
         # never leave a half-executed batch: over-quota requests fail
         # their futures here and are dropped before any protocol round
         reserved: Dict[str, int] = {}
         admitted: List[Request] = []
-        for r in batch:
+        for r in survivors:
             need = self._required_elements(self.plan_for_shape(r.shape))
             provider = self.tenant_provider(r.tenant)
             if provider.budget_elements is not None:
@@ -446,7 +528,7 @@ class InferenceEngine:
                     continue
             reserved[r.tenant] = reserved.get(r.tenant, 0) + need
             admitted.append(r)
-        if not admitted:                      # every request was over-quota
+        if not admitted:                 # every request over-quota or shed
             return None
         sched = schedule_lib.simulate_merged(
             [self.plan_for_shape(r.shape).call_specs() for r in admitted],
@@ -454,20 +536,50 @@ class InferenceEngine:
         serial_rounds = sum(
             self.plan_for_shape(r.shape).schedule().n_rounds
             for r in admitted)
-        rounds0, bytes0 = self.comm.n_rounds, self.comm.bytes_tx
-        key_iters = [iter(jax.random.split(r.key, 256)) for r in admitted]
         providers = [self.tenant_provider(r.tenant) for r in admitted]
-        try:
-            outs = self.model._run_streams(
-                [r.x for r in admitted], key_iters, providers, self.comm,
-                self.model.params, auto_batch=self.policy.merge_identical)
-        except BaseException as e:
-            # a failed replay must not strand its futures: fail them all
-            # so result() surfaces the error instead of hanging on a
-            # request that left the queue but never produced an output
-            for r in admitted:
-                self._futures.pop(r.id)._fail(e)
-            raise
+        resilient = comm_lib.find_resilient(self.comm)
+        attempts = 0
+        while True:
+            # per ATTEMPT: fresh key iterators (same request keys — the
+            # retry draws the identical stream), provider checkpoints so
+            # a rolled-back tenant re-draws identical triples and is
+            # billed once, and fresh round/byte marks so the report
+            # reflects only the successful attempt
+            rounds0, bytes0 = self.comm.n_rounds, self.comm.bytes_tx
+            recovered0 = resilient.recovered if resilient else 0
+            tokens = [(p, p.checkpoint())
+                      for p in dict.fromkeys(providers)]
+            key_iters = [iter(jax.random.split(r.key, 256))
+                         for r in admitted]
+            t0 = time.monotonic()
+            try:
+                outs = self.model._run_streams(
+                    [r.x for r in admitted], key_iters, providers,
+                    self.comm, self.model.params,
+                    auto_batch=self.policy.merge_identical)
+                break
+            except BaseException as e:
+                for p, tok in tokens:
+                    p.rollback(tok)
+                crash = isinstance(e, errors.PartyCrashed)
+                retryable = (errors.is_retryable(e)
+                             or (crash and self.on_party_crash is not None))
+                if not retryable or attempts >= self.max_batch_retries:
+                    # a failed replay must not strand its futures: fail
+                    # them all so result() surfaces the error instead of
+                    # hanging on a request that left the queue but never
+                    # produced an output
+                    for r in admitted:
+                        self._futures.pop(r.id)._fail(e)
+                    raise
+                if crash:
+                    self.on_party_crash(e)      # revive the transport
+                attempts += 1
+                self._totals["retries"] += 1
+        wall = time.monotonic() - t0
+        faults_recovered = ((resilient.recovered - recovered0)
+                            if resilient else 0)
+        self._totals["faults_recovered"] += faults_recovered
         preset = self.policy.preset
         report = BatchReport(
             request_ids=tuple(r.id for r in admitted),
@@ -480,12 +592,19 @@ class InferenceEngine:
             serial_rounds=serial_rounds,
             predicted_latency_s=sched.latency(preset.bandwidth_bps,
                                               preset.rtt_s),
-            waits_s=tuple(max(0.0, now_s - r.arrival_s) for r in admitted))
+            waits_s=tuple(max(0.0, now_s - r.arrival_s) for r in admitted),
+            retries=attempts,
+            faults_recovered=faults_recovered,
+            shed=shed)
         self.reports.append(report)
         self._totals["requests"] += report.n_requests
         self._totals["batches"] += 1
         self._totals["fused_rounds"] += report.measured_rounds
         self._totals["serial_rounds"] += report.serial_rounds
+        if report.measured_rounds:     # slow-round watchdog (shared EWMA)
+            self.watchdog.observe(len(self.reports) - 1,
+                                  wall / report.measured_rounds,
+                                  on_straggler=self._on_straggler)
         for r, out in zip(admitted, outs):
             if r.out_batch != r.shape[0]:      # slice bucket padding back off
                 out = MPCTensor(
@@ -514,4 +633,5 @@ class InferenceEngine:
                                    / max(1, self._totals["fused_rounds"])),
             "p50_sim_latency_s": pct(0.50),
             "p95_sim_latency_s": pct(0.95),
+            "slow_batches": len(self.watchdog.stragglers),
         }

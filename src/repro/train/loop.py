@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.checkpoint import store
 from repro.configs.base import ArchConfig
 from repro.launch import train as train_lib
+from repro.runtime.watchdog import StragglerWatchdog
 from repro.train import optimizer as opt_lib
 
 
@@ -67,8 +68,7 @@ def run(cfg: ArchConfig, pipeline, loop_cfg: LoopConfig,
             if (loop_cfg.ckpt_dir and loop_cfg.async_ckpt) else None)
 
     losses: List[float] = []
-    stragglers: List[int] = []
-    ewma = None
+    watchdog = StragglerWatchdog(factor=loop_cfg.straggler_factor)
     start = int(state.step)
     for step in range(start, loop_cfg.total_steps):
         t0 = time.time()  # includes data fetch: stalls there are stragglers too
@@ -76,16 +76,9 @@ def run(cfg: ArchConfig, pipeline, loop_cfg: LoopConfig,
         state, metrics = step_fn(state, batch)
         loss = float(metrics["loss"])
         dt = time.time() - t0
-        if step == start:
-            pass  # first step includes compilation; never seeds the EWMA
-        elif ewma is None:
-            ewma = dt
-        else:
-            if dt > loop_cfg.straggler_factor * ewma and step > start + 2:
-                stragglers.append(step)
-                if "on_straggler" in hooks:
-                    hooks["on_straggler"](step, dt, ewma)
-            ewma = 0.9 * ewma + 0.1 * dt
+        if step != start:  # first step includes compilation; never observed
+            watchdog.observe(step, dt,
+                             on_straggler=hooks.get("on_straggler"))
         losses.append(loss)
         if "on_step" in hooks:
             hooks["on_step"](step, loss)
@@ -103,7 +96,7 @@ def run(cfg: ArchConfig, pipeline, loop_cfg: LoopConfig,
         store.save(loop_cfg.ckpt_dir, loop_cfg.total_steps, state,
                    {"final": True})
     return LoopReport(loop_cfg.total_steps, losses, resumed_from,
-                      stragglers, ewma or 0.0)
+                      watchdog.stragglers, watchdog.ewma or 0.0)
 
 
 def elastic_restore(ckpt_dir: str, cfg: ArchConfig, optimizer, mesh,

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import api
+from repro import api, errors
 from repro.core import MPCTensor, beaver, comm as comm_lib, ring, shares
 from repro.core import schedule as schedule_lib
 from repro.core.hummingbird import HBConfig, HBLayer
@@ -594,3 +594,164 @@ def test_data_axis_census_unchanged_per_shard():
                          capture_output=True, text=True, timeout=900)
     assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
     assert "DATA_AXIS_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Engine resilience (ISSUE 6): deadline shedding, batch retry on comm
+# faults, crash + restart hook — failure accounting exact in stats()
+# ---------------------------------------------------------------------------
+
+def _chaos_engine(params, plan, fault_plan, *, resilient_retries=3, **kw):
+    """An engine whose session comm realizes ``fault_plan`` below a
+    ResilientComm; returns (engine, injector, resilient)."""
+    from repro.core import faults
+    fic = faults.FaultInjectingComm(fault_plan)
+    rc = comm_lib.ResilientComm(fic, max_retries=resilient_retries)
+    session = api.Session(key=0, comm=rc)
+    engine = InferenceEngine(tiny_apply, params, TinyCfg(), plan, session,
+                             **kw)
+    return engine, fic, rc
+
+
+def test_deadline_shedding_typed_and_counted(tiny):
+    """A request that provably cannot meet its deadline is shed before
+    any triple is consumed; the others in the same batch still run."""
+    params, plan = tiny
+    engine = _engine(params, plan)
+    doomed = engine.submit("alice", _request_tensor(0, 2), deadline_s=0.0)
+    ok = engine.submit("bob", _request_tensor(1, 2))
+    assert ok.result() is not None
+    with pytest.raises(errors.DeadlineExceeded) as ei:
+        doomed.result()
+    assert ei.value.request_id == doomed.request.id
+    assert ei.value.tenant == "alice"
+    stats = engine.stats()
+    assert stats["shed"] == 1 and stats["requests"] == 1
+    assert engine.reports[-1].shed == 1
+    # shed before execution: alice consumed nothing
+    assert engine.tenant_usage("alice")["consumed_elements"] == 0
+    # a generous deadline is met normally
+    fine = engine.submit("alice", _request_tensor(2, 2), deadline_s=60.0)
+    assert fine.result() is not None
+    assert engine.stats()["shed"] == 1
+
+
+def test_batch_retry_on_transient_faults_bit_identical(tiny):
+    """Transport retry budget 0 forces every transient up to the engine:
+    the whole batch re-executes (providers rolled back, same request
+    keys) and the results stay bit-identical to a fault-free engine —
+    with STATEFUL StreamingTTP providers, so the rollback is load-bearing."""
+    from repro.core import faults
+    params, plan = tiny
+    factory = lambda tenant: beaver.StreamingTTP(
+        jax.random.PRNGKey(len(tenant)))
+
+    clean = _engine(params, plan, provider_factory=factory)
+    f_clean = [clean.submit(t, _request_tensor(i, 2))
+               for i, t in enumerate(["alice", "bob"])]
+    want = [f.result() for f in f_clean]
+
+    fault_plan = faults.FaultPlan.seeded(3, 10, drops=1, corrupts=1)
+    engine, fic, rc = _chaos_engine(params, plan, fault_plan,
+                                    resilient_retries=0,
+                                    provider_factory=factory)
+    futs = [engine.submit(t, _request_tensor(i, 2))
+            for i, t in enumerate(["alice", "bob"])]
+    outs = [f.result() for f in futs]
+    for got, ref in zip(outs, want):
+        np.testing.assert_array_equal(ring.to_uint64_np(got.data),
+                                      ring.to_uint64_np(ref.data))
+    stats = engine.stats()
+    assert stats["retries"] == 2 == engine.reports[-1].retries
+    assert fic.injected["drop"] == 1 and fic.injected["corrupt"] == 1
+    # tenants billed exactly once despite the re-executions
+    per_request = 2 * D_HID + 2 * D_OUT
+    assert engine.tenant_usage("alice")["consumed_elements"] == per_request
+
+
+def test_transport_absorbs_faults_engine_counts_recovery(tiny):
+    """With transport-level retries available the engine never re-runs the
+    batch; it reports the rounds the transport healed."""
+    from repro.core import faults
+    params, plan = tiny
+    fault_plan = faults.FaultPlan.seeded(5, 10, drops=2, corrupts=1)
+    engine, fic, rc = _chaos_engine(params, plan, fault_plan,
+                                    resilient_retries=3)
+    fut = engine.submit("alice", _request_tensor(0, 2))
+    out = fut.result()
+    want = _serial_oracle(params, plan, _request_tensor(0, 2), 0)
+    np.testing.assert_array_equal(ring.to_uint64_np(out.data),
+                                  ring.to_uint64_np(want.data))
+    stats = engine.stats()
+    assert stats["retries"] == 0
+    assert stats["faults_recovered"] == 3 == engine.reports[-1].faults_recovered
+    assert rc.retries == 3 and rc.recovered == 3
+
+
+def test_party_crash_restart_hook_retries_batch(tiny):
+    """A mid-replay crash fails the batch unless on_party_crash revives
+    the transport; with the hook, the retried results are bit-identical."""
+    from repro.core import faults
+    params, plan = tiny
+
+    # no hook: the typed crash propagates and fails the future
+    fault_plan = faults.FaultPlan.seeded(0, 10, drops=0, corrupts=0,
+                                         crash_round=2)
+    engine, fic, rc = _chaos_engine(params, plan, fault_plan)
+    fut = engine.submit("alice", _request_tensor(0, 2))
+    with pytest.raises(errors.PartyCrashed):
+        engine.flush()
+    with pytest.raises(errors.PartyCrashed) as ei:
+        fut.result()
+    assert ei.value.request_id == fut.request.id
+
+    # with the hook: restart + one batch retry, bit-identical output
+    fault_plan = faults.FaultPlan.seeded(0, 10, drops=0, corrupts=0,
+                                         crash_round=2)
+    holder = {}
+    engine2, fic2, rc2 = _chaos_engine(
+        params, plan, fault_plan,
+        on_party_crash=lambda e: holder["fic"].restart())
+    holder["fic"] = fic2
+    fut2 = engine2.submit("alice", _request_tensor(0, 2))
+    out = fut2.result()
+    want = _serial_oracle(params, plan, _request_tensor(0, 2), 0)
+    np.testing.assert_array_equal(ring.to_uint64_np(out.data),
+                                  ring.to_uint64_np(want.data))
+    assert engine2.stats()["retries"] == 1
+    assert fic2.restarts == 1
+
+
+def test_result_timeout_raises_instead_of_hanging(tiny):
+    """A policy that never closes a solo batch used to make result() spin
+    via flush; with timeout_s the caller gets a typed timeout carrying
+    the request identity."""
+    params, plan = tiny
+    engine = _engine(params, plan,
+                     policy=BatchPolicy(max_batch=8, min_gain=-1.0))
+    fut = engine.submit("alice", _request_tensor(0, 2))
+    with pytest.raises(errors.ResultTimeout) as ei:
+        fut.result(timeout_s=0.05)
+    assert ei.value.request_id == fut.request.id
+    assert ei.value.tenant == "alice"
+    assert not fut.done                       # still queued, not failed
+    assert fut.result() is not None           # blocking drain still works
+
+
+def test_typed_errors_preserve_builtin_contracts(tiny):
+    """The new hierarchy subclasses the builtins it replaced, so every
+    historical except/raises call site keeps working."""
+    params, plan = tiny
+    engine = _engine(params, plan)
+    engine.submit("alice", _request_tensor(0, 2))
+    with pytest.raises(errors.DuplicateRequest):
+        engine.submit("alice", _request_tensor(0, 2), request_id=0)
+    assert issubclass(errors.DuplicateRequest, ValueError)
+    assert issubclass(errors.ShapeMismatch, ValueError)
+    assert issubclass(errors.UnregisteredModel, KeyError)
+    assert issubclass(errors.TripleBudgetExceeded, RuntimeError)
+    assert beaver.TripleBudgetExceeded is errors.TripleBudgetExceeded
+    with pytest.raises(KeyError, match="no MPC forward"):
+        class Unknown:
+            pass
+        api.compile(None, {}, Unknown(), plan, api.Session(key=0))

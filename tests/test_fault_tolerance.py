@@ -10,7 +10,9 @@ import pytest
 from repro.checkpoint import store
 from repro.configs import get
 from repro.data import TokenPipeline
+from repro.launch import train as train_lib
 from repro.launch.mesh import make_smoke_mesh
+from repro.runtime.watchdog import StragglerWatchdog
 from repro.train import loop as loop_lib, optimizer as opt_lib
 
 
@@ -78,8 +80,8 @@ def test_restart_equals_uninterrupted(small_cfg, tmp_path):
                               ckpt_dir=str(d1), async_ckpt=False)
     loop_lib.run(small_cfg, pipe, lc1, optimizer=opt)
     s1, _ = store.restore(str(d1), jax.eval_shape(
-        lambda k: __import__("repro.launch.train", fromlist=["x"]).init_state(
-            k, small_cfg, opt), jax.ShapeDtypeStruct((2,), jnp.uint32)))
+        lambda k: train_lib.init_state(k, small_cfg, opt),
+        jax.ShapeDtypeStruct((2,), jnp.uint32)))
     # interrupted at 6, checkpointed at 4, resumed
     d2 = tmp_path / "b"
     lc2 = loop_lib.LoopConfig(total_steps=8, ckpt_every=4,

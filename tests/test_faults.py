@@ -1,0 +1,261 @@
+"""Chaos property tests: recovered executions are bit-exact.
+
+The contract under test, per ISSUE 6's acceptance criteria:
+
+- Under any seeded ``FaultPlan`` of transient faults (drops, stalls,
+  corrupted payloads), the resilient stack's outputs are bit-exact vs the
+  frozen seed reference (``core/gmw_ref.py``) — recovery never perturbs a
+  share.
+- Retry counts match the plan exactly: one re-send per transient event,
+  counted both at the injector (``FaultInjectingComm.injected``) and the
+  transport (``ResilientComm.retries``/``faults_detected``).
+- ``CoalescingComm`` round counters still match the ``core.schedule``
+  prediction once injected re-sends are excluded (re-sends live below the
+  coalescer and never add protocol rounds), and the framed byte counts
+  match ``Schedule.framed()`` exactly.
+- A party crash is not retryable by re-send: it propagates typed, and the
+  ``RoundJournal`` resume path completes the execution bit-identically.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import errors
+from repro.core import (beaver, comm as comm_lib, faults, fixed, gmw,
+                        gmw_ref, ring, schedule, shares)
+
+try:                                   # optional: property test only
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+_KM_POOL = [(64, 0), (21, 13), (20, 14), (5, 3), (2, 1)]
+
+
+def _make_group(n, k, m, cone, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-3.5, 3.5, n).astype(np.float32)
+    X = shares.share(jax.random.PRNGKey(seed), fixed.encode_np(x))
+    tri = beaver.gen_relu_triples(jax.random.PRNGKey(seed + 1), n, k - m,
+                                  cone=cone)
+    return X, tri
+
+
+def _mix(specs, cone, seed):
+    keys, Xs, trs = [], [], []
+    for i, (n, k, m) in enumerate(specs):
+        X, tri = _make_group(n, k, m, cone, seed + 10 * i)
+        keys.append(jax.random.PRNGKey(seed + 1000 + i))
+        Xs.append(X)
+        trs.append(tri)
+    return keys, Xs, trs
+
+
+def _check_chaos_mix(specs, fault_seed, cone=False, seed=0,
+                     drops=1, corrupts=1, stalls=1):
+    """Run a stream mix through the full chaos stack and assert every
+    contract: bit-exactness vs gmw_ref, retry accounting, and round/byte
+    counters vs the schedule prediction (re-sends excluded)."""
+    kms = [(k, m) for _, k, m in specs]
+    sched = schedule.simulate([(n, k - m) for n, k, m in specs],
+                              cone=cone, auto_batch=False)
+    plan = faults.FaultPlan.seeded(fault_seed, sched.n_rounds, drops=drops,
+                                  corrupts=corrupts, stalls=stalls)
+    fic = faults.FaultInjectingComm(plan)
+    rc = comm_lib.ResilientComm(fic, max_retries=4)
+    cc = comm_lib.CoalescingComm(rc)
+
+    keys, Xs, trs = _mix(specs, cone, seed)
+    outs = gmw.relu_many(keys, Xs, trs, cc, kms, cone=cone,
+                         auto_batch=False)
+
+    # bit-exact vs the frozen seed reference, share level
+    ref_cm = comm_lib.SimComm()
+    for (n, k, m), key, X, tri, out in zip(specs, keys, Xs, trs, outs):
+        ref = gmw_ref.relu(key, X, tri, ref_cm, k=k, m=m, cone=cone)
+        np.testing.assert_array_equal(ring.to_uint64_np(out),
+                                      ring.to_uint64_np(ref))
+
+    # retries match the plan: one re-send per transient event, realized
+    assert rc.retries == plan.n_transient
+    assert rc.recovered == plan.n_transient          # distinct rounds
+    assert fic.injected["drop"] == plan.count("drop")
+    assert fic.injected["stall"] == plan.count("stall")
+    assert fic.injected["corrupt"] == plan.count("corrupt")
+    assert (rc.faults_detected["timeout"]
+            == plan.count("drop") + plan.count("stall"))
+    assert rc.faults_detected["corrupt"] == plan.count("corrupt")
+
+    # round counters: the coalescer (above the resilient layer) never
+    # sees a re-send — its counters equal the fault-free prediction
+    assert cc.n_rounds == sched.n_rounds == fic.round
+    assert cc.round_bytes == list(sched.round_bytes)
+    # the wire itself carries the frame: measured == framed prediction
+    framed = sched.framed()
+    assert rc.round_bytes == list(framed.round_bytes)
+    assert rc.bytes_tx == framed.bytes_tx
+    # recovery overhead: every failed attempt re-ships one framed round
+    assert rc.resent_bytes > 0 if plan.events else rc.resent_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# Deterministic scenario coverage
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("specs,cone", [
+    ([(64, 21, 13)], False),
+    ([(96, 64, 0), (160, 21, 13), (64, 20, 14)], False),
+    ([(48, 21, 13), (48, 20, 14)], True),
+    ([(40, 2, 1), (40, 64, 0)], False),      # w=1 next to a deep ring
+])
+def test_chaos_mix_bit_exact(specs, cone):
+    _check_chaos_mix(specs, fault_seed=11, cone=cone)
+
+
+def test_no_faults_no_overhead():
+    """An empty plan injects nothing: zero retries, zero resent bytes."""
+    _check_chaos_mix([(64, 21, 13)], fault_seed=0,
+                     drops=0, corrupts=0, stalls=0)
+
+
+if HAVE_HYPOTHESIS:
+    _GROUP = st.tuples(
+        st.integers(min_value=1, max_value=80),
+        st.sampled_from(_KM_POOL),
+    )
+
+    @settings(max_examples=6, deadline=None)
+    @given(groups=st.lists(_GROUP, min_size=1, max_size=3),
+           fault_seed=st.integers(min_value=0, max_value=2**16),
+           cone=st.booleans())
+    def test_chaos_property_random_mixes(groups, fault_seed, cone):
+        specs = [(n, k, m) for n, (k, m) in groups]
+        _check_chaos_mix(specs, fault_seed=fault_seed, cone=cone, seed=7)
+
+
+@pytest.mark.parametrize("case_seed", [0, 1, 2, 3])
+def test_chaos_random_sweep(case_seed):
+    """Deterministic randomized sweep (runs with or without hypothesis):
+    random mixes under random fault schedules, including multi-event
+    plans heavier than the default."""
+    rng = np.random.default_rng(300 + case_seed)
+    n_groups = int(rng.integers(1, 4))
+    specs = []
+    for _ in range(n_groups):
+        n = int(rng.choice([16, 32, 50, 80]))
+        k, m = _KM_POOL[int(rng.integers(len(_KM_POOL)))]
+        specs.append((n, k, m))
+    _check_chaos_mix(specs, fault_seed=int(rng.integers(2**16)),
+                     cone=bool(case_seed % 2), seed=400 + case_seed,
+                     drops=int(rng.integers(0, 3)),
+                     corrupts=int(rng.integers(0, 3)),
+                     stalls=int(rng.integers(0, 2)))
+
+
+# ---------------------------------------------------------------------------
+# Transport semantics
+# ---------------------------------------------------------------------------
+
+def test_retry_budget_exhaustion_raises_typed():
+    """More consecutive faults on one round than the retry budget: the
+    typed error propagates (transient events at the same round each
+    consume one attempt)."""
+    plan = faults.FaultPlan(tuple(
+        faults.FaultEvent(round=0, kind="drop") for _ in range(3)))
+    rc = comm_lib.ResilientComm(faults.FaultInjectingComm(plan),
+                                max_retries=1)
+    x = jax.numpy.zeros((2, 4), jax.numpy.uint32)
+    with pytest.raises(errors.CommTimeout) as ei:
+        rc.swap(x)
+    assert errors.is_retryable(ei.value)
+    assert rc.retries == 1                     # budget, not event count
+
+
+def test_corruption_detected_wherever_it_lands():
+    """Any single-bit flip in the framed buffer — payload, seq word or
+    checksum word — fails verification and is healed by the re-send."""
+    for word in [0, 3, 100, 101, 7919]:
+        plan = faults.FaultPlan((faults.FaultEvent(
+            round=0, kind="corrupt", word=word, bit=word % 32),))
+        rc = comm_lib.ResilientComm(faults.FaultInjectingComm(plan))
+        x = jax.numpy.arange(2 * 4, dtype=jax.numpy.uint32).reshape(2, 4)
+        out = rc.swap(x)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(comm_lib.SimComm().swap(x)))
+        assert rc.retries == 1 and rc.faults_detected["corrupt"] == 1
+
+
+def test_crash_is_not_retryable_by_resend():
+    plan = faults.FaultPlan.seeded(0, 4, drops=0, corrupts=0, crash_round=0)
+    rc = comm_lib.ResilientComm(faults.FaultInjectingComm(plan),
+                                max_retries=5)
+    with pytest.raises(errors.PartyCrashed) as ei:
+        rc.swap(jax.numpy.zeros((2, 2), jax.numpy.uint32))
+    assert not errors.is_retryable(ei.value)
+    assert rc.retries == 0                     # no re-send was attempted
+
+
+def test_timeout_detection_on_slow_base():
+    """ResilientComm's own elapsed-time check: a base comm slower than
+    timeout_s raises CommTimeout after the budget, without any injector
+    in the stack."""
+    class SlowComm(comm_lib.SimComm):
+        def swap(self, x):
+            import time
+            time.sleep(0.02)
+            return super().swap(x)
+
+    rc = comm_lib.ResilientComm(SlowComm(), max_retries=1, timeout_s=0.001)
+    with pytest.raises(errors.CommTimeout):
+        rc.swap(jax.numpy.zeros((2, 2), jax.numpy.uint32))
+    assert rc.faults_detected["timeout"] == 2        # attempt + retry
+
+
+# ---------------------------------------------------------------------------
+# Crash + journal resume: bit-identical completion
+# ---------------------------------------------------------------------------
+
+def test_crash_then_journal_resume_bit_identical(tmp_path):
+    """Crash mid-replay, snapshot the journal at the barrier, restart a
+    fresh stack with the journal mounted: recorded rounds replay off the
+    wire and the final shares equal an uninterrupted run's exactly."""
+    specs = [(64, 21, 13), (32, 20, 14)]
+    kms = [(k, m) for _, k, m in specs]
+    keys, Xs, trs = _mix(specs, False, 5)
+    ref = gmw.relu_many(keys, Xs, trs,
+                        comm_lib.CoalescingComm(comm_lib.SimComm()), kms,
+                        auto_batch=False)
+
+    plan = faults.FaultPlan.seeded(0, 10, drops=0, corrupts=0,
+                                   crash_round=3)
+    jc = faults.JournaledComm(comm_lib.ResilientComm(
+        faults.FaultInjectingComm(plan)))
+    with pytest.raises(errors.PartyCrashed):
+        gmw.relu_many(keys, Xs, trs, comm_lib.CoalescingComm(jc), kms,
+                      auto_batch=False)
+    jc.snapshot(str(tmp_path))
+
+    journal = faults.RoundJournal.load(str(tmp_path))
+    assert len(journal) == 3                   # rounds completed pre-crash
+    jc2 = faults.JournaledComm(comm_lib.ResilientComm(), journal=journal)
+    outs = gmw.relu_many(keys, Xs, trs, comm_lib.CoalescingComm(jc2), kms,
+                         auto_batch=False)
+    assert jc2.replayed == 3
+    for a, b in zip(outs, ref):
+        np.testing.assert_array_equal(ring.to_uint64_np(a),
+                                      ring.to_uint64_np(b))
+
+
+def test_journal_snapshot_is_torn_write_safe(tmp_path):
+    """An uncommitted snapshot directory is invisible to load()."""
+    j = faults.RoundJournal()
+    j.record([np.arange(8, dtype=np.uint32).reshape(2, 4)])
+    j.save(str(tmp_path))
+    bad = tmp_path / "step_00000009"
+    bad.mkdir()
+    (bad / "arrays.npz").write_bytes(b"garbage")   # torn write, no sentinel
+    loaded = faults.RoundJournal.load(str(tmp_path))
+    assert len(loaded) == 1
+    np.testing.assert_array_equal(loaded.rounds[0][0], j.rounds[0][0])

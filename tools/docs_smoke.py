@@ -68,6 +68,8 @@ def main() -> int:
     readme = ROOT / "README.md"
     docs = sorted((ROOT / "docs").glob("**/*.md"))
     errors = run_python_blocks(readme)
+    # docs with an executable-quickstart contract ride the same gate
+    errors += run_python_blocks(ROOT / "docs" / "robustness.md")
     errors += check_links([readme] + docs)
     for e in errors:
         print(f"DOCS-SMOKE: {e}", file=sys.stderr)
