@@ -9,7 +9,12 @@ the 8-bit reduced ring, the round-fused engine vs the frozen seed path
 measured entry sits next to the ``core.schedule`` prediction
 (``sched_rounds_pred`` / ``sched_bytes_pred`` plus LAN/WAN latency
 projections); ``--check`` is the CI round-regression gate that fails when
-measured fused swaps exceed the prediction.
+measured fused swaps exceed the prediction.  ``--transport`` runs the
+real two-process deployment (both parties as OS processes over localhost
+TCP under an injected RTT, plus an HTTP-frontend throughput probe) and
+``--check`` then also enforces exact wire-vs-schedule byte parity,
+bit-identity against the SimComm reference, and the wall-clock tolerance
+band.
 """
 import argparse
 import json
@@ -345,6 +350,191 @@ def chaos(out_path: str = "BENCH_relu.json") -> dict:
     return entry
 
 
+def transport(out_path: str = "BENCH_relu.json") -> dict:
+    """``--transport``: the real two-process deployment gate.  Writes a
+    smoke job directory, launches BOTH parties as their own OS processes
+    (``repro.launch.party_host``) over localhost TCP with an injected
+    WAN-style RTT, and records:
+
+    - byte-accounting parity: the socket transport's measured DATA
+      payload bytes and round count vs the ``Schedule.framed()``
+      prediction (``--check`` fails on ANY divergence — the wire is the
+      schedule, exactly);
+    - bit-identity: the combined party output shares vs an in-process
+      SimComm reference run of the same job;
+    - wall-clock vs the schedule's latency projection under the injected
+      RTT (gated with a timing-noise tolerance band: the shaped floor is
+      hard, the ceiling allows compile + interpreter overhead);
+    - requests/s through the asyncio HTTP frontend driving a
+      leader/follower engine link over a second real socket pair.
+
+    Results merge into BENCH_relu.json under ``"transport"``."""
+    import json as json_lib
+    import subprocess
+    import tempfile
+    import threading
+    import urllib.request
+
+    import jax
+    import numpy as np
+
+    from repro import api
+    from repro.configs import RESNET_SMOKE
+    from repro.core import beaver, ring
+    from repro.core.hummingbird import HBConfig, HBLayer
+    from repro.models import resnet
+    from repro.serve import Frontend, InferenceEngine
+    from repro import transport as transport_lib
+
+    rng = np.random.default_rng(0)
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+
+    def afn(p, v, relu_fn=None):
+        return resnet.apply(p, v, RESNET_SMOKE, relu_fn=relu_fn)
+
+    plan = api.trace_plan(afn, params, (2, 3, 8, 8), name="smoke")
+    plan = plan.with_hb(HBConfig(
+        tuple([HBLayer(k=21, m=13)] * (plan.n_groups - 1)
+              + [HBLayer(k=13, m=13)]), plan.group_elements))
+    framed = plan.schedule().framed()
+    rtt_ms = 4.0
+    predicted_latency_s = framed.latency(float("inf"), rtt_ms / 1e3)
+
+    # in-process SimComm reference: the bit-identity oracle
+    enc_model = api.compile(afn, params, RESNET_SMOKE, plan,
+                            api.Session(key=0))
+    x = rng.uniform(-0.5, 0.5, (2, 3, 8, 8)).astype(np.float32)
+    X = enc_model.encrypt(jax.random.PRNGKey(2), x)
+    pool = beaver.gen_plan_triples(jax.random.PRNGKey(3),
+                                   plan.triple_specs())
+    ref_model = api.compile(
+        afn, params, RESNET_SMOKE, plan,
+        api.Session(key=0, provider=beaver.TriplePool(pool)))
+    want = ring.to_uint64_np(
+        ref_model(X, key=jax.random.PRNGKey(4)).data)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        job_dir = os.path.join(tmp, "job")
+        transport_lib.write_job(
+            job_dir, plan=plan, config="smoke", params_seed=0, infer_key=4,
+            session_seed=0, x=X, pool=pool)
+        port = transport_lib.free_port()
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(_ROOT, "src")
+                   + os.pathsep + os.environ.get("PYTHONPATH", ""))
+
+        def spawn(party, *extra):
+            link = (["--listen", f"127.0.0.1:{port}"] if party == 0
+                    else ["--peer", f"127.0.0.1:{port}"])
+            return subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.party_host",
+                 "--party", str(party), "--job", job_dir,
+                 "--rtt-ms", str(rtt_ms)] + link + list(extra),
+                env=env, cwd=_ROOT)
+
+        t0 = time.perf_counter()
+        procs = [spawn(0), spawn(1)]
+        rcs = [p.wait(timeout=600) for p in procs]
+        pair_wall = time.perf_counter() - t0
+        if any(rcs):
+            raise RuntimeError(f"party_host exit codes {rcs}")
+
+        outs, stats = [], []
+        for p in (0, 1):
+            with np.load(os.path.join(job_dir, f"out{p}.npz")) as npz:
+                outs.append((npz["lo"].copy(), npz["hi"].copy()))
+            with open(os.path.join(job_dir, f"stats{p}.json")) as f:
+                stats.append(json_lib.load(f))
+        got = ring.to_uint64_np(ring.Ring64(
+            np.concatenate([outs[0][0], outs[1][0]]),
+            np.concatenate([outs[0][1], outs[1][1]])))
+        bit_identical = bool(np.array_equal(got, want))
+
+    # HTTP frontend over a leader/follower engine link on a second socket
+    fport = transport_lib.free_port()
+    follower_served = {}
+
+    def follower():
+        session = api.Session.connect(
+            1, peer=("127.0.0.1", fport), key=0, session_id="bench",
+            plan_digest=plan.digest(), handshake_timeout_s=120.0,
+            timeout_s=120.0)
+        model = api.compile(afn, params, RESNET_SMOKE, plan, session)
+        try:
+            follower_served["n"] = transport_lib.serve_follower(
+                session.transport, model,
+                provider_factory=transport_lib.tenant_provider_factory(
+                    0, party=1))
+        finally:
+            session.transport.close()
+
+    fthread = threading.Thread(target=follower, daemon=True)
+    fthread.start()
+    session = api.Session.connect(
+        0, listen=("127.0.0.1", fport), key=0, session_id="bench",
+        plan_digest=plan.digest(), handshake_timeout_s=120.0,
+        timeout_s=120.0)
+    engine = InferenceEngine(
+        afn, params, RESNET_SMOKE, plan, session,
+        provider_factory=transport_lib.tenant_provider_factory(0, party=0))
+    link = transport_lib.EngineLink(engine)
+    frontend = Frontend(engine)
+    n_http = 3
+    try:
+        host, hport = frontend.serve_background("127.0.0.1", 0)
+        t0 = time.perf_counter()
+        for i, tenant in enumerate("aba"[:n_http]):
+            xq = rng.uniform(-0.5, 0.5, (2, 3, 8, 8)).astype(np.float32)
+            req = urllib.request.Request(
+                f"http://{host}:{hport}/infer", method="POST",
+                data=json_lib.dumps({"tenant": tenant,
+                                     "x": xq.tolist()}).encode())
+            with urllib.request.urlopen(req, timeout=600) as resp:
+                assert resp.status == 200
+                json_lib.loads(resp.read().decode())
+        frontend_wall = time.perf_counter() - t0
+    finally:
+        frontend.close()
+        link.shutdown()
+        session.transport.close()
+    fthread.join(60.0)
+
+    entry = {
+        "rtt_ms_injected": rtt_ms,
+        "rounds_measured": [int(s["rounds"]) for s in stats],
+        "sched_rounds_pred": framed.n_rounds,
+        "payload_bytes_measured": [int(s["payload_bytes"]) for s in stats],
+        "sched_bytes_pred": framed.bytes_tx,
+        "header_bytes": [int(s["header_bytes"]) for s in stats],
+        "bit_identical": bit_identical,
+        "wall_s": round(max(float(s["wall_s"]) for s in stats), 4),
+        "pair_wall_s": round(pair_wall, 4),
+        "predicted_latency_s": round(predicted_latency_s, 4),
+        # timing-noise tolerance band: the shaper makes the predicted
+        # latency a HARD floor; the ceiling absorbs jit compile +
+        # python/socket overhead on a busy CI box
+        "wall_band_s": [round(predicted_latency_s, 4),
+                        round(20.0 * predicted_latency_s + 120.0, 4)],
+        "frontend": {
+            "requests": n_http,
+            "requests_per_s": round(n_http / max(frontend_wall, 1e-9), 3),
+            "wall_s": round(frontend_wall, 4),
+            "follower_batches": int(follower_served.get("n", 0)),
+        },
+    }
+    try:
+        with open(out_path) as f:
+            results = json.load(f)
+    except FileNotFoundError:
+        results = {}
+    results["transport"] = entry
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(json.dumps({"transport": entry}, indent=2, sort_keys=True))
+    assert bit_identical, "two-process run diverged from SimComm reference"
+    return entry
+
+
 def check(path: str = "BENCH_relu.json") -> int:
     """Round-regression gate: fail (non-zero) when the measured fused
     engine used MORE swaps than the round schedule predicts — i.e. the
@@ -414,6 +604,39 @@ def check(path: str = "BENCH_relu.json") -> int:
             failures.append("chaos: deadline shed not counted/typed "
                             f"(shed={ch.get('shed')}, "
                             f"typed={ch.get('shed_typed')})")
+    # transport gate (present once --transport ran): the real two-process
+    # wire must MATCH the schedule exactly — byte-accounting parity is an
+    # equality, not a bound — and the shaped wall-clock must sit inside
+    # the recorded timing-noise tolerance band
+    tr = data.get("transport")
+    if tr is not None:
+        if not tr.get("bit_identical"):
+            failures.append("transport: two-process outputs diverged from "
+                            "the SimComm reference")
+        for party, rounds in enumerate(tr.get("rounds_measured", [])):
+            if rounds != tr.get("sched_rounds_pred"):
+                failures.append(
+                    f"transport: party {party} measured {rounds} rounds "
+                    f"!= schedule-predicted {tr.get('sched_rounds_pred')}")
+        for party, nbytes in enumerate(tr.get("payload_bytes_measured", [])):
+            if nbytes != tr.get("sched_bytes_pred"):
+                failures.append(
+                    f"transport: party {party} measured {nbytes} payload "
+                    f"bytes != framed-schedule {tr.get('sched_bytes_pred')}")
+        lo_s, hi_s = tr.get("wall_band_s", (0.0, float("inf")))
+        if not (lo_s <= tr.get("wall_s", -1.0) <= hi_s):
+            failures.append(
+                f"transport: shaped wall {tr.get('wall_s')}s outside the "
+                f"tolerance band [{lo_s}, {hi_s}]s (predicted "
+                f"{tr.get('predicted_latency_s')}s under "
+                f"{tr.get('rtt_ms_injected')}ms injected RTT)")
+        fe = tr.get("frontend", {})
+        if fe.get("requests_per_s", 0) <= 0 or fe.get("follower_batches",
+                                                      0) < 1:
+            failures.append(
+                f"transport: HTTP frontend served no traffic "
+                f"(requests_per_s={fe.get('requests_per_s')}, "
+                f"follower_batches={fe.get('follower_batches')})")
     if failures:
         for msg in failures:
             print(f"ROUND-REGRESSION: {msg}", file=sys.stderr)
@@ -433,6 +656,13 @@ def check(path: str = "BENCH_relu.json") -> int:
               f"({ch['injected']}), {ch['chaos_retries']} retries, "
               f"{ch['chaos_recovery_overhead_bytes']} B recovery overhead, "
               f"resume replayed {ch['resume_replayed_rounds']} rounds")
+    if tr is not None:
+        print(f"transport gate OK: 2-process wire == schedule "
+              f"({tr['sched_rounds_pred']} rounds / "
+              f"{tr['sched_bytes_pred']} B exactly), bit-identical, wall "
+              f"{tr['wall_s']}s in band {tr['wall_band_s']} under "
+              f"{tr['rtt_ms_injected']}ms RTT; HTTP frontend "
+              f"{tr['frontend']['requests_per_s']} req/s")
     return 0
 
 
@@ -475,6 +705,13 @@ def main() -> None:
                          "FaultPlan (drops, a corrupt payload, a mid-replay "
                          "crash), assert bit-identical recovery, and merge "
                          "the accounting into BENCH_relu.json['chaos']")
+    ap.add_argument("--transport", action="store_true",
+                    help="real two-process deployment gate: both parties "
+                         "as OS processes over localhost TCP under an "
+                         "injected RTT + an HTTP-frontend throughput "
+                         "probe; merges byte-accounting parity and wall "
+                         "vs predicted latency into "
+                         "BENCH_relu.json['transport']")
     ap.add_argument("--check", action="store_true",
                     help="round-regression gate over an existing "
                          "BENCH_relu.json: exit 1 when measured fused swaps "
@@ -500,9 +737,11 @@ def main() -> None:
         quick(args.out)
     if args.chaos:
         chaos(args.out)
+    if args.transport:
+        transport(args.out)
     if args.check:
         sys.exit(check(args.out))
-    if args.gantt or args.quick or args.chaos:
+    if args.gantt or args.quick or args.chaos or args.transport:
         return
     from benchmarks import (bench_accuracy, bench_breakdown, bench_comm,
                             bench_e2e, bench_roofline, bench_search)

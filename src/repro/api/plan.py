@@ -236,6 +236,15 @@ class Plan:
                     input_shape=tuple(int(s) for s in d["input_shape"]),
                     cone=bool(d["cone"]), name=str(d.get("name", "")))
 
+    def digest(self) -> str:
+        """Short stable content hash of the plan (canonical JSON).  The
+        transport handshake exchanges it so two party processes refuse to
+        talk unless they would replay the *same* network with the same
+        (k, m) assignment (``repro.transport``)."""
+        import hashlib
+        blob = json.dumps(self.to_json(), sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
     def save(self, path) -> None:
         pathlib.Path(path).write_text(json.dumps(self.to_json(), indent=1))
 

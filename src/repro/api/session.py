@@ -76,7 +76,9 @@ class Session:
     def resilient(self, *, max_retries: int = 3,
                   timeout_s: Optional[float] = None,
                   backoff_s: float = 0.0, backoff_cap_s: float = 1.0,
-                  fault_plan=None, journal=None) -> "Session":
+                  fault_plan=None, journal=None,
+                  snapshot_dir: Optional[str] = None,
+                  snapshot_every: int = 1) -> "Session":
         """Wrap this session's comm in the resilient transport stack
         (``docs/robustness.md``): framed retry/backoff over the current
         backend, with optional deterministic fault injection below it and
@@ -102,6 +104,66 @@ class Session:
                                       backoff_cap_s=backoff_cap_s)
         if journal is not None:
             from repro.core import faults as faults_lib
-            comm = faults_lib.JournaledComm(comm, journal=journal)
+            comm = faults_lib.JournaledComm(comm, journal=journal,
+                                            snapshot_dir=snapshot_dir,
+                                            snapshot_every=snapshot_every)
         self.comm = comm
         return self
+
+    @classmethod
+    def connect(cls, party: int, *, listen=None, peer=None,
+                key: Union[int, jax.Array, None] = None,
+                provider: Optional[beaver.TripleProvider] = None,
+                session_id: str = "", plan_digest: str = "",
+                journal=None, snapshot_dir: Optional[str] = None,
+                snapshot_every: int = 1, shaper=None,
+                timeout_s: Optional[float] = 30.0, max_retries: int = 3,
+                backoff_s: float = 0.01, backoff_cap_s: float = 0.5,
+                handshake_timeout_s: float = 60.0) -> "Session":
+        """A real two-process deployment session: this process is ONE
+        party, talking to its peer over TCP (``repro.transport``).
+
+        Exactly one of ``listen``/``peer`` names the link: ``listen``
+        binds and accepts (conventionally the lower party index),
+        ``peer`` dials with retry while the other process starts up.
+        The handshake cross-checks (party complement, ``session_id``,
+        ``plan_digest``) and negotiates the journal resume round; the
+        comm is then stacked ``SocketComm -> ResilientComm ->
+        JournaledComm?`` so real timeouts heal via idempotent re-send and
+        a restarted process resumes bit-identically from its journal
+        (truncated here to the negotiated common prefix).
+
+        The socket transport is reachable afterwards as
+        ``session.transport`` (wire-byte counters, ctrl channel).
+
+        Example (one process per party)::
+
+            s0 = api.Session.connect(0, listen=("127.0.0.1", 9000),
+                                     key=7, session_id="demo",
+                                     plan_digest=plan.digest())
+            s1 = api.Session.connect(1, peer=("127.0.0.1", 9000), ...)
+        """
+        from repro.transport import SocketComm
+        journal_len = len(journal) if journal is not None else 0
+        common = dict(party=party, session=session_id, plan=plan_digest,
+                      journal_len=journal_len, shaper=shaper,
+                      timeout_s=timeout_s)
+        if (listen is None) == (peer is None):
+            raise ValueError("pass exactly one of listen= / peer=")
+        if listen is not None:
+            sock = SocketComm.host(listen,
+                                   accept_timeout_s=handshake_timeout_s,
+                                   **common)
+        else:
+            sock = SocketComm.dial(peer,
+                                   connect_timeout_s=handshake_timeout_s,
+                                   **common)
+        if journal is not None:
+            journal.truncate(sock.negotiated["resume_round"])
+        session = cls(key=key, comm=sock, provider=provider)
+        session.resilient(max_retries=max_retries, backoff_s=backoff_s,
+                          backoff_cap_s=backoff_cap_s, journal=journal,
+                          snapshot_dir=snapshot_dir,
+                          snapshot_every=snapshot_every)
+        session.transport = sock
+        return session

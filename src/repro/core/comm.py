@@ -430,13 +430,21 @@ class ResilientComm:
         return self.base.party_slice(full)
 
 
-def find_resilient(comm) -> Optional[ResilientComm]:
-    """The ``ResilientComm`` inside a wrapper stack, if any (the serving
-    engine reads its recovery counters per batch)."""
+def find_comm(comm, cls):
+    """First wrapper of type ``cls`` in a comm stack (walks the ``.base``
+    chain).  Lets callers reach a specific layer's counters without
+    knowing how the stack was composed — e.g. the serving frontend digs
+    out the ``transport.SocketComm`` for its wire-byte stats."""
     seen = set()
     while comm is not None and id(comm) not in seen:
         seen.add(id(comm))
-        if isinstance(comm, ResilientComm):
+        if isinstance(comm, cls):
             return comm
         comm = getattr(comm, "base", None)
     return None
+
+
+def find_resilient(comm) -> Optional[ResilientComm]:
+    """The ``ResilientComm`` inside a wrapper stack, if any (the serving
+    engine reads its recovery counters per batch)."""
+    return find_comm(comm, ResilientComm)

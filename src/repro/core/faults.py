@@ -211,6 +211,14 @@ class RoundJournal:
     def record(self, leaves) -> None:
         self.rounds.append([np.asarray(leaf) for leaf in leaves])
 
+    def truncate(self, n_rounds: int) -> None:
+        """Drop every round past ``n_rounds`` — the resume negotiation:
+        after an abrupt kill the two parties' journals may differ by the
+        in-flight round, so both truncate to ``min(len_a, len_b)``
+        (exchanged in the transport handshake) and resume live execution
+        from the same round barrier."""
+        del self.rounds[int(n_rounds):]
+
     def save(self, ckpt_dir: str) -> None:
         flat = [a for rnd in self.rounds for a in rnd]
         store.save(ckpt_dir, step=len(self.rounds), tree=flat,
@@ -237,12 +245,21 @@ class JournaledComm:
     to ``base`` and are recorded on success.  Mount it ABOVE
     ``ResilientComm`` so only verified payloads are journaled, and BELOW
     ``CoalescingComm`` so one journal entry is one fused round.
+
+    With ``snapshot_dir``, the journal is persisted (atomically) every
+    ``snapshot_every`` live rounds — the continuous-checkpoint mode a
+    deployed party host runs in, so a kill at ANY round loses at most
+    ``snapshot_every - 1`` rounds of journal (``launch/party_host.py``).
     """
 
-    def __init__(self, base=None, journal: Optional[RoundJournal] = None):
+    def __init__(self, base=None, journal: Optional[RoundJournal] = None,
+                 *, snapshot_dir: Optional[str] = None,
+                 snapshot_every: int = 1):
         self.base = base if base is not None else SimComm()
         self.journal = journal if journal is not None else RoundJournal()
         self.n_parties = self.base.n_parties
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = max(1, int(snapshot_every))
         self.cursor = 0
         self.replayed = 0
 
@@ -261,6 +278,9 @@ class JournaledComm:
         opened = self.base.swap(x)
         self.journal.record(jax.tree_util.tree_flatten(opened)[0])
         self.cursor += 1
+        if (self.snapshot_dir is not None
+                and self.cursor % self.snapshot_every == 0):
+            self.snapshot(self.snapshot_dir)
         return opened
 
     def snapshot(self, ckpt_dir: str) -> None:

@@ -74,6 +74,14 @@ class PartyCrashed(CommError):
     when an ``on_party_crash`` hook revived the transport."""
 
 
+class HandshakeFailed(CommError, ConnectionError):
+    """The two party processes disagree on identity at connect time —
+    party index collision, session-seed or plan-digest mismatch, protocol
+    version skew, or no peer within the accept/connect budget.  Fatal by
+    design: running the protocol across mismatched sessions would produce
+    garbage shares, so ``repro.transport`` refuses to start."""
+
+
 # ---------------------------------------------------------------------------
 # Serving-engine request failures (repro.serve)
 # ---------------------------------------------------------------------------

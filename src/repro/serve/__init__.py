@@ -15,6 +15,7 @@ execution contract.
 """
 from .engine import (BatchPolicy, BatchReport, InferenceEngine, Request,
                      RequestFuture)
+from .frontend import Frontend
 
 __all__ = ["InferenceEngine", "BatchPolicy", "BatchReport", "Request",
-           "RequestFuture"]
+           "RequestFuture", "Frontend"]

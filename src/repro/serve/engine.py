@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -138,6 +139,7 @@ class RequestFuture:
         self._value: Optional[MPCTensor] = None
         self._exc: Optional[BaseException] = None
         self._done = False
+        self._event = threading.Event()
         self.report: Optional["BatchReport"] = None
 
     @property
@@ -154,9 +156,22 @@ class RequestFuture:
         the timeout expires, and an unresolved request raises
         ``errors.ResultTimeout`` instead of spinning forever on a wedged
         engine.
+
+        When the engine's background pump is running (``start_pump``),
+        ``result`` never drives execution itself — it just waits on the
+        pump (``submit()`` alone makes progress; ``poll``/``flush`` stay
+        available as manual overrides).
         """
         if not self._done:
-            if timeout_s is None:
+            if self._engine.pump_running:
+                if not self._event.wait(timeout_s):
+                    raise errors.attach_request(
+                        errors.ResultTimeout(
+                            f"request {self.request.id} unresolved after "
+                            f"{timeout_s}s (pump running, engine queue: "
+                            f"{self._engine.pending} pending)"),
+                        self.request.id, self.request.tenant)
+            elif timeout_s is None:
                 self._engine.flush()
             else:
                 deadline = time.monotonic() + timeout_s
@@ -183,6 +198,7 @@ class RequestFuture:
 
     def _resolve(self, value: MPCTensor, report: "BatchReport") -> None:
         self._value, self.report, self._done = value, report, True
+        self._event.set()
 
     def _fail(self, exc: BaseException) -> None:
         # stamp the originating request's identity, first failure wins (a
@@ -190,6 +206,7 @@ class RequestFuture:
         if getattr(exc, "request_id", None) is None:
             errors.attach_request(exc, self.request.id, self.request.tenant)
         self._exc, self._done = exc, True
+        self._event.set()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -306,6 +323,21 @@ class InferenceEngine:
         #: the transport (e.g. FaultInjectingComm.restart).
         self.max_batch_retries = max_batch_retries
         self.on_party_crash = on_party_crash
+        #: transport hooks (see ``repro.transport.engine_link``): a
+        #: two-process deployment replaces each batch attempt's execution
+        #: tensors (ship the peer's input shares, keep own rows) and
+        #: recombines the peer's output shares after the replay.  None =
+        #: single-process execution, unchanged.
+        self.on_batch_attempt: Optional[Callable] = None
+        self.on_batch_outputs: Optional[Callable] = None
+        #: one lock serialises every queue/execution entry point so the
+        #: background pump, a frontend's submit threads, and direct
+        #: poll/flush callers compose; RLock because poll -> _execute ->
+        #: tenant_provider nest.
+        self._lock = threading.RLock()
+        self._pump_thread: Optional[threading.Thread] = None
+        self._pump_stop = threading.Event()
+        self.last_pump_error: Optional[BaseException] = None
         #: slow-round detection: each executed batch's per-fused-round
         #: wall time feeds the shared EWMA watchdog (same implementation
         #: as the training loop's per-step straggler detector)
@@ -386,39 +418,40 @@ class InferenceEngine:
         batch formation only ever sees cache hits and can never drop
         already-queued requests on a trace error.
         """
-        if request_id is None:
-            request_id = self._next_id
-        if request_id in self._used_ids:
-            raise errors.DuplicateRequest(
-                f"request id {request_id} already submitted")
-        self.plan_for_shape(x.shape)
-        self._used_ids.add(request_id)
-        self._next_id = max(self._next_id, request_id + 1)
-        key = self.session.request_key(request_id)
-        if not isinstance(x, MPCTensor):
-            enc_key, key = jax.random.split(key)
-            x = MPCTensor.from_plain(enc_key, jnp.asarray(x))
-        out_batch = int(x.shape[0])
-        bucket = self.policy.bucket_shape(x.shape)
-        if bucket != tuple(x.shape):
-            pad = bucket[0] - out_batch
+        with self._lock:
+            if request_id is None:
+                request_id = self._next_id
+            if request_id in self._used_ids:
+                raise errors.DuplicateRequest(
+                    f"request id {request_id} already submitted")
+            self.plan_for_shape(x.shape)
+            self._used_ids.add(request_id)
+            self._next_id = max(self._next_id, request_id + 1)
+            key = self.session.request_key(request_id)
+            if not isinstance(x, MPCTensor):
+                enc_key, key = jax.random.split(key)
+                x = MPCTensor.from_plain(enc_key, jnp.asarray(x))
+            out_batch = int(x.shape[0])
+            bucket = self.policy.bucket_shape(x.shape)
+            if bucket != tuple(x.shape):
+                pad = bucket[0] - out_batch
 
-            def _pad(a):
-                widths = [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2)
-                return jnp.pad(a, widths)
+                def _pad(a):
+                    widths = [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2)
+                    return jnp.pad(a, widths)
 
-            x = MPCTensor(ring.Ring64(_pad(x.data.lo), _pad(x.data.hi)),
-                          x.frac_bits)
-        req = Request(id=request_id, tenant=tenant, x=x, key=key,
-                      arrival_s=(time.monotonic() if arrival_s is None
-                                 else float(arrival_s)),
-                      shape=bucket, out_batch=out_batch,
-                      deadline_s=(None if deadline_s is None
-                                  else float(deadline_s)))
-        fut = RequestFuture(self, req)
-        self._futures[request_id] = fut
-        self._queue.append(req)
-        return fut
+                x = MPCTensor(ring.Ring64(_pad(x.data.lo), _pad(x.data.hi)),
+                              x.frac_bits)
+            req = Request(id=request_id, tenant=tenant, x=x, key=key,
+                          arrival_s=(time.monotonic() if arrival_s is None
+                                     else float(arrival_s)),
+                          shape=bucket, out_batch=out_batch,
+                          deadline_s=(None if deadline_s is None
+                                      else float(deadline_s)))
+            fut = RequestFuture(self, req)
+            self._futures[request_id] = fut
+            self._queue.append(req)
+            return fut
 
     @property
     def pending(self) -> int:
@@ -463,29 +496,31 @@ class InferenceEngine:
         Returns the reports of the batches executed."""
         now = time.monotonic() if now_s is None else float(now_s)
         executed = []
-        while self._queue:
-            head_wait = now - self._queue[0].arrival_s
-            deadline = head_wait >= self.policy.max_wait_s
-            batch = self._form_batch()
-            ready = (deadline or len(batch) >= self.policy.max_batch
-                     or bool(self._queue))
-            if not ready:
-                # put the still-open batch back and wait for more traffic
-                self._queue.extendleft(reversed(batch))
-                break
-            report = self._execute(batch, now)
-            if report is not None:
-                executed.append(report)
+        with self._lock:
+            while self._queue:
+                head_wait = now - self._queue[0].arrival_s
+                deadline = head_wait >= self.policy.max_wait_s
+                batch = self._form_batch()
+                ready = (deadline or len(batch) >= self.policy.max_batch
+                         or bool(self._queue))
+                if not ready:
+                    # put the still-open batch back, wait for more traffic
+                    self._queue.extendleft(reversed(batch))
+                    break
+                report = self._execute(batch, now)
+                if report is not None:
+                    executed.append(report)
         return executed
 
     def flush(self) -> List[BatchReport]:
         """Drain the queue unconditionally (deadlines ignored): form
         policy-shaped batches until nothing is pending."""
         executed = []
-        while self._queue:
-            report = self._execute(self._form_batch(), time.monotonic())
-            if report is not None:
-                executed.append(report)
+        with self._lock:
+            while self._queue:
+                report = self._execute(self._form_batch(), time.monotonic())
+                if report is not None:
+                    executed.append(report)
         return executed
 
     def _execute(self, batch: List[Request],
@@ -551,10 +586,16 @@ class InferenceEngine:
                       for p in dict.fromkeys(providers)]
             key_iters = [iter(jax.random.split(r.key, 256))
                          for r in admitted]
+            # transport hook: a two-process deployment ships the peer's
+            # input shares here (per attempt — a retried batch re-sends
+            # its descriptor) and returns this party's execution tensors
+            xs = [r.x for r in admitted]
+            if self.on_batch_attempt is not None:
+                xs = self.on_batch_attempt(admitted)
             t0 = time.monotonic()
             try:
                 outs = self.model._run_streams(
-                    [r.x for r in admitted], key_iters, providers,
+                    xs, key_iters, providers,
                     self.comm, self.model.params,
                     auto_batch=self.policy.merge_identical)
                 break
@@ -576,6 +617,10 @@ class InferenceEngine:
                     self.on_party_crash(e)      # revive the transport
                 attempts += 1
                 self._totals["retries"] += 1
+        if self.on_batch_outputs is not None:
+            # transport hook: collect the peer's output share rows and
+            # recombine into full-party tensors so futures reveal
+            outs = self.on_batch_outputs(admitted, outs)
         wall = time.monotonic() - t0
         faults_recovered = ((resilient.recovered - recovered0)
                             if resilient else 0)
@@ -614,13 +659,68 @@ class InferenceEngine:
             self._futures.pop(r.id)._resolve(out, report)
         return report
 
+    # -- background pump -------------------------------------------------------
+    @property
+    def pump_running(self) -> bool:
+        return self._pump_thread is not None and self._pump_thread.is_alive()
+
+    def start_pump(self, interval_s: float = 0.005,
+                   max_wait_s: Optional[float] = None) -> None:
+        """Drive the engine from a daemon thread so ``submit()`` alone
+        makes progress (the async-frontend contract): the pump ``poll``s
+        continuously, and once the head request has aged past
+        ``max_wait_s`` (default: the policy's ``max_wait_s``, or 50 ms
+        when that is unbounded) it ``flush``es so a lone request is never
+        stranded waiting for a batch that will not fill.  ``poll`` and
+        ``flush`` remain safe to call manually — everything serialises on
+        the engine lock.  A batch failure inside the pump fails its
+        futures exactly as a caller-driven batch would and is kept in
+        ``last_pump_error``; the pump keeps running."""
+        if self.pump_running:
+            return
+        if max_wait_s is None:
+            max_wait_s = (self.policy.max_wait_s
+                          if self.policy.max_wait_s != float("inf") else 0.05)
+        self._pump_stop.clear()
+        self._pump_thread = threading.Thread(
+            target=self._pump_loop, args=(float(interval_s),
+                                          float(max_wait_s)),
+            name="engine-pump", daemon=True)
+        self._pump_thread.start()
+
+    def stop_pump(self, timeout_s: float = 5.0) -> None:
+        """Stop the background pump (pending requests stay queued)."""
+        if self._pump_thread is None:
+            return
+        self._pump_stop.set()
+        self._pump_thread.join(timeout_s)
+        self._pump_thread = None
+
+    def _pump_loop(self, interval_s: float, max_wait_s: float) -> None:
+        while not self._pump_stop.is_set():
+            try:
+                executed = self.poll()
+                if not executed:
+                    with self._lock:
+                        head = self._queue[0] if self._queue else None
+                        age = (time.monotonic() - head.arrival_s
+                               if head is not None else -1.0)
+                    if head is not None and age >= max_wait_s:
+                        self.flush()
+            except Exception as e:          # futures already failed, typed
+                self.last_pump_error = e
+            self._pump_stop.wait(interval_s)
+
     # -- aggregate stats -------------------------------------------------------
     def stats(self) -> Dict[str, float]:
         """Lifetime totals (fused vs serial rounds over every executed
         batch) plus the simulated per-request latency distribution (queue
         wait + the merged timeline under ``policy.network``) over the
         retained ``report_history`` window."""
-        lats = sorted(l for rep in self.reports for l in rep.sim_latencies_s)
+        with self._lock:
+            lats = sorted(l for rep in self.reports
+                          for l in rep.sim_latencies_s)
+            totals = dict(self._totals)
 
         def pct(p: float) -> float:
             if not lats:
@@ -628,9 +728,9 @@ class InferenceEngine:
             return lats[min(len(lats) - 1, int(p * len(lats)))]
 
         return {
-            **self._totals,
-            "rounds_saved_ratio": (self._totals["serial_rounds"]
-                                   / max(1, self._totals["fused_rounds"])),
+            **totals,
+            "rounds_saved_ratio": (totals["serial_rounds"]
+                                   / max(1, totals["fused_rounds"])),
             "p50_sim_latency_s": pct(0.50),
             "p95_sim_latency_s": pct(0.95),
             "slow_batches": len(self.watchdog.stragglers),

@@ -1,0 +1,427 @@
+"""SocketComm: the real inter-process party link over TCP.
+
+Every other backend in ``core.comm`` simulates the second party
+(``SimComm`` materialises both rows, ``MeshComm`` puts them on device
+shards of one process).  ``SocketComm`` is the deployment backend: each
+party is its OWN operating-system process holding only its OWN share
+rows (local party dimension 1 — the layout the mesh backend already
+proved the protocol against with ``axis_size == 2``), and ``swap`` is a
+length-prefixed framed exchange of the round's flattened uint32 buffer
+over a TCP connection.
+
+Wire format (little-endian), one message per direction per round::
+
+    +-------+------+-------+-------+---------+---------+----------+
+    | magic | kind | party | flags |   seq   | n_bytes | body ... |
+    |  4 B  | 1 B  |  1 B  |  2 B  |   4 B   |   4 B   | n_bytes  |
+    +-------+------+-------+-------+---------+---------+----------+
+
+kinds: HELLO (handshake json), DATA (one protocol round's payload
+words), CTRL (out-of-band json + blob, used by the serving engine link).
+
+Contracts that make the stack above "just work":
+
+- **Byte accounting**: ``round_bytes``/``bytes_tx`` count ONLY the
+  protocol payload (the body of DATA messages) — exactly what
+  ``core.comm.payload_bytes`` counts for the sim backends and what
+  ``core.schedule``'s ``Schedule.framed()`` predicts.  The 16-byte
+  message envelope is this transport's own overhead (analogous to
+  TCP/IP headers, which no backend counts) and is tracked separately in
+  ``header_bytes``.
+- **Idempotent re-send** (what ``ResilientComm`` needs): a round's
+  DATA message carries the sender's round sequence number.  Stale
+  duplicates (seq < expected) are dropped; the last few delivered
+  payloads are cached so a local retry of an already-delivered round
+  returns the cached bytes instead of deadlocking on a peer that will
+  never re-send (TCP already delivered reliably).
+- **Typed failures**: a socket timeout raises ``errors.CommTimeout``
+  (retryable — ``ResilientComm`` re-sends), a closed/reset connection
+  raises ``errors.PartyCrashed`` (not retryable — recovery is restart +
+  ``RoundJournal`` resume), a handshake identity mismatch raises
+  ``errors.HandshakeFailed``.
+- **Link shaping**: ``LinkShaper(rtt_s, bandwidth_bps)`` paces each
+  round to ``rtt + 2 * payload_bytes * 8 / bandwidth`` — the exact
+  per-round term of ``Schedule.latency`` — so measured wall-clock under
+  an injected WAN profile can be validated against the schedule
+  prediction (``benchmarks/run.py --transport``).
+
+Handshake: both ends exchange a HELLO naming (protocol version, party
+index, session id, plan digest, journal length) and fail loudly on any
+identity mismatch.  The journal lengths negotiate the resume round
+after a crash: both parties truncate their ``RoundJournal`` to
+``min(len_a, len_b)`` so replay ends — and live execution resumes, with
+both sockets and both ``ResilientComm`` sequence counters at zero — on
+the same round barrier (see ``Session.connect``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import socket as socket_lib
+import struct
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import errors
+
+MAGIC = b"HBTP"
+VERSION = 1
+HEADER = struct.Struct("<4sBBHII")      # magic kind party flags seq n_bytes
+KIND_HELLO, KIND_DATA, KIND_CTRL = 1, 2, 3
+_KIND_NAMES = {KIND_HELLO: "HELLO", KIND_DATA: "DATA", KIND_CTRL: "CTRL"}
+_U32 = jnp.uint32
+
+
+def free_port(host: str = "127.0.0.1") -> int:
+    """An OS-assigned free TCP port (tests / examples)."""
+    with socket_lib.socket() as s:
+        s.bind((host, 0))
+        return s.getsockname()[1]
+
+
+def parse_address(addr: str, default_port: int = 9000) -> Tuple[str, int]:
+    """``"host:port"`` / ``":port"`` / ``"host"`` -> (host, port)."""
+    if ":" in addr:
+        host, port = addr.rsplit(":", 1)
+        return (host or "127.0.0.1", int(port))
+    return (addr or "127.0.0.1", default_port)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkShaper:
+    """Injected link profile: each round is paced to the schedule
+    simulator's per-round cost, ``rtt_s + 2 * bytes * 8 / bandwidth``
+    (both directions ride the link, same pricing as
+    ``core.schedule.Schedule.latency``).  ``from_preset`` shapes to a
+    ``repro.api.plan.NetworkPreset`` (LAN/WAN)."""
+
+    rtt_s: float = 0.0
+    bandwidth_bps: float = float("inf")
+
+    @classmethod
+    def from_preset(cls, preset) -> "LinkShaper":
+        return cls(rtt_s=preset.rtt_s, bandwidth_bps=preset.bandwidth_bps)
+
+    def round_delay(self, payload_bytes: int) -> float:
+        bw = (2.0 * payload_bytes * 8.0 / self.bandwidth_bps
+              if self.bandwidth_bps != float("inf") else 0.0)
+        return self.rtt_s + bw
+
+
+class SocketComm:
+    """Two-party ``Comm`` backend over one TCP connection.
+
+    Construct via :meth:`host` (bind + accept, usually party 0) or
+    :meth:`dial` (connect with retry while the peer starts up).  Local
+    arrays carry a party dimension of 1 — this process's own rows —
+    exactly like a size-2 mesh axis shard; ``swap`` returns the peer's
+    rows in the same (1, ...) layout.
+
+    Mount it at the very bottom of the resilience stack::
+
+        CoalescingComm( JournaledComm( ResilientComm( SocketComm )))
+
+    (``Session.connect`` builds exactly that.)  ``timeout_s`` applies to
+    every blocking receive; ``ResilientComm`` owns the retry budget.
+    """
+
+    n_parties = 2
+
+    def __init__(self, sock: socket_lib.socket, party: int, *,
+                 shaper: Optional[LinkShaper] = None,
+                 timeout_s: Optional[float] = None):
+        if party not in (0, 1):
+            raise ValueError(f"party must be 0 or 1, got {party}")
+        self._sock = sock
+        self.party = int(party)
+        self.shaper = shaper
+        self.timeout_s = timeout_s
+        sock.setsockopt(socket_lib.IPPROTO_TCP, socket_lib.TCP_NODELAY, 1)
+        sock.settimeout(timeout_s)
+        self.negotiated: Dict = {}
+        #: receive buffer persisting across CommTimeouts: a timeout
+        #: mid-message keeps the bytes already read, so a retried recv
+        #: resumes the SAME message instead of misparsing the stream
+        self._rx_buf = bytearray()
+        self._seq = 0                            # completed DATA rounds
+        self._ctrl_pending: collections.deque = collections.deque()
+        self._recv_cache: "collections.OrderedDict[int, bytes]" = \
+            collections.OrderedDict()
+        self.n_swaps = 0
+        self.round_bytes: List[int] = []
+        self.header_bytes = 0                    # envelope overhead, not wire
+        self.dup_dropped = 0
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def host(cls, bind: Tuple[str, int], *, party: int = 0,
+             session: str = "", plan: str = "", journal_len: int = 0,
+             shaper: Optional[LinkShaper] = None,
+             timeout_s: Optional[float] = None,
+             accept_timeout_s: float = 60.0) -> "SocketComm":
+        """Bind, accept one peer, handshake."""
+        srv = socket_lib.socket()
+        srv.setsockopt(socket_lib.SOL_SOCKET, socket_lib.SO_REUSEADDR, 1)
+        srv.bind(tuple(bind))
+        srv.listen(1)
+        srv.settimeout(accept_timeout_s)
+        try:
+            conn, _ = srv.accept()
+        except socket_lib.timeout as e:
+            raise errors.HandshakeFailed(
+                f"no peer connected to {bind} within "
+                f"{accept_timeout_s}s") from e
+        finally:
+            srv.close()
+        comm = cls(conn, party, shaper=shaper, timeout_s=timeout_s)
+        comm._handshake(session, plan, journal_len,
+                        handshake_timeout_s=accept_timeout_s)
+        return comm
+
+    @classmethod
+    def dial(cls, peer: Tuple[str, int], *, party: int = 1,
+             session: str = "", plan: str = "", journal_len: int = 0,
+             shaper: Optional[LinkShaper] = None,
+             timeout_s: Optional[float] = None,
+             connect_timeout_s: float = 60.0) -> "SocketComm":
+        """Connect to a hosting peer, retrying while it starts up."""
+        deadline = time.monotonic() + connect_timeout_s
+        last: Optional[Exception] = None
+        while True:
+            try:
+                conn = socket_lib.create_connection(
+                    tuple(peer), timeout=max(0.1, deadline - time.monotonic()))
+                break
+            except OSError as e:
+                last = e
+                if time.monotonic() >= deadline:
+                    raise errors.HandshakeFailed(
+                        f"could not reach peer at {peer} within "
+                        f"{connect_timeout_s}s: {last}") from e
+                time.sleep(0.05)
+        comm = cls(conn, party, shaper=shaper, timeout_s=timeout_s)
+        comm._handshake(session, plan, journal_len,
+                        handshake_timeout_s=connect_timeout_s)
+        return comm
+
+    def _handshake(self, session: str, plan: str, journal_len: int,
+                   handshake_timeout_s: float) -> None:
+        hello = {"version": VERSION, "party": self.party,
+                 "session": str(session), "plan": str(plan),
+                 "journal": int(journal_len)}
+        self._send(KIND_HELLO, 0, json.dumps(hello).encode())
+        self._sock.settimeout(handshake_timeout_s)
+        try:
+            kind, _, _, body = self._recv_msg()
+        except errors.CommError as e:
+            raise errors.HandshakeFailed(f"handshake failed: {e}") from e
+        finally:
+            self._sock.settimeout(self.timeout_s)
+        if kind != KIND_HELLO:
+            raise errors.HandshakeFailed(
+                f"expected HELLO, got {_KIND_NAMES.get(kind, kind)}")
+        peer = json.loads(body.decode())
+        if peer.get("version") != VERSION:
+            raise errors.HandshakeFailed(
+                f"protocol version mismatch: local {VERSION}, "
+                f"peer {peer.get('version')}")
+        if peer.get("party") != 1 - self.party:
+            raise errors.HandshakeFailed(
+                f"party collision: both ends claim party index "
+                f"{self.party}" if peer.get("party") == self.party else
+                f"unexpected peer party {peer.get('party')}")
+        if peer.get("session") != str(session):
+            raise errors.HandshakeFailed(
+                f"session mismatch: local {session!r}, "
+                f"peer {peer.get('session')!r} — the two parties were "
+                "launched with different session seeds")
+        if peer.get("plan") != str(plan):
+            raise errors.HandshakeFailed(
+                f"plan mismatch: local digest {plan!r}, peer "
+                f"{peer.get('plan')!r} — the two parties would replay "
+                "different networks")
+        self.negotiated = {
+            "peer_party": int(peer["party"]),
+            "session": str(session),
+            "plan": str(plan),
+            "journal_len": int(journal_len),
+            "peer_journal_len": int(peer.get("journal", 0)),
+            "resume_round": min(int(journal_len),
+                                int(peer.get("journal", 0))),
+        }
+
+    # -- raw messaging --------------------------------------------------------
+    def _send(self, kind: int, seq: int, body: bytes) -> None:
+        msg = HEADER.pack(MAGIC, kind, self.party, 0, seq & 0xFFFFFFFF,
+                          len(body)) + body
+        try:
+            self._sock.sendall(msg)
+        except socket_lib.timeout as e:
+            raise errors.CommTimeout(f"socket send stalled: {e}") from e
+        except OSError as e:
+            raise errors.PartyCrashed(f"peer connection lost: {e}") from e
+        self.header_bytes += HEADER.size
+
+    def _fill(self, n: int) -> None:
+        """Grow the receive buffer to at least n bytes (resumable: a
+        timeout keeps everything read so far)."""
+        while len(self._rx_buf) < n:
+            try:
+                chunk = self._sock.recv(1 << 20)
+            except socket_lib.timeout as e:      # noqa: B902 (py3.10 alias)
+                raise errors.CommTimeout(
+                    f"socket recv stalled past {self._sock.gettimeout()}s "
+                    f"({len(self._rx_buf)}/{n} bytes buffered)") from e
+            except OSError as e:
+                raise errors.PartyCrashed(
+                    f"peer connection lost: {e}") from e
+            if not chunk:
+                raise errors.PartyCrashed(
+                    f"peer closed the connection "
+                    f"({len(self._rx_buf)}/{n} bytes of a message)")
+            self._rx_buf.extend(chunk)
+
+    def _recv_msg(self) -> Tuple[int, int, int, bytes]:
+        self._fill(HEADER.size)
+        magic, kind, party, _flags, seq, n = HEADER.unpack_from(self._rx_buf)
+        if magic != MAGIC:
+            raise errors.PayloadCorrupted(
+                f"bad message magic {magic!r} (stream desynchronised)")
+        self._fill(HEADER.size + n)
+        body = bytes(self._rx_buf[HEADER.size:HEADER.size + n])
+        del self._rx_buf[:HEADER.size + n]
+        return kind, party, seq, body
+
+    def _recv_data(self, expect_seq: int) -> bytes:
+        if expect_seq in self._recv_cache:
+            # a local retry of a round TCP already delivered: serve the
+            # cached payload — the peer advanced and will never re-send
+            return self._recv_cache[expect_seq]
+        while True:
+            kind, _, seq, body = self._recv_msg()
+            if kind == KIND_CTRL:
+                self._ctrl_pending.append(body)
+                continue
+            if kind != KIND_DATA:
+                raise errors.PayloadCorrupted(
+                    f"expected DATA, got {_KIND_NAMES.get(kind, kind)}")
+            if seq == expect_seq:
+                self._recv_cache[seq] = body
+                while len(self._recv_cache) > 8:
+                    self._recv_cache.popitem(last=False)
+                return body
+            if seq < expect_seq:                 # peer's idempotent re-send
+                self.dup_dropped += 1
+                continue
+            raise errors.PayloadCorrupted(
+                f"round desync: peer sent round {seq}, this party expects "
+                f"{expect_seq}")
+
+    # -- the Comm interface ---------------------------------------------------
+    @property
+    def n_rounds(self) -> int:
+        return self.n_swaps
+
+    @property
+    def bytes_tx(self) -> int:
+        return sum(self.round_bytes)
+
+    def swap(self, x):
+        """One protocol round: send this party's rows, return the peer's.
+
+        Payload leaves must be uint32 with a local party dimension of 1
+        (this process holds only its own shares).  Retrying after a
+        ``CommTimeout`` re-enters with the same sequence number — the
+        re-send is idempotent and an already-delivered peer payload is
+        served from the receive cache.
+        """
+        leaves, treedef = jax.tree_util.tree_flatten(x)
+        for leaf in leaves:
+            if leaf.dtype != _U32:
+                raise TypeError(
+                    f"SocketComm payloads must be uint32, got {leaf.dtype}")
+            if leaf.shape[0] != 1:
+                raise TypeError(
+                    "SocketComm is a per-process party backend: leaves "
+                    f"carry a local party dim of 1, got shape {leaf.shape}")
+        t0 = time.monotonic()
+        blob = b"".join(np.ascontiguousarray(np.asarray(leaf)).tobytes()
+                        for leaf in leaves)
+        self._send(KIND_DATA, self._seq, blob)
+        data = self._recv_data(self._seq)
+        if len(data) != len(blob):
+            raise errors.PayloadCorrupted(
+                f"round {self._seq}: peer sent {len(data)} payload bytes, "
+                f"expected {len(blob)} (mismatched executions)")
+        if self.shaper is not None:
+            target = t0 + self.shaper.round_delay(len(blob))
+            now = time.monotonic()
+            if target > now:
+                time.sleep(target - now)
+        self._seq += 1
+        self.n_swaps += 1
+        self.round_bytes.append(len(blob))
+        out, off = [], 0
+        for leaf in leaves:
+            arr = np.frombuffer(data, np.uint32, count=leaf.size,
+                                offset=off).reshape(leaf.shape)
+            out.append(jnp.asarray(arr))
+            off += leaf.size * 4
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def party_is(self, p: int, template: jax.Array) -> jax.Array:
+        return jnp.full((1,) * max(1, template.ndim), p == self.party,
+                        dtype=bool)
+
+    def party_slice(self, full: jax.Array) -> jax.Array:
+        """This party's rows of a full (n_parties, ...) array."""
+        return full[self.party:self.party + 1]
+
+    # -- out-of-band control channel (serving engine link) --------------------
+    def send_ctrl(self, obj: Dict, blob: bytes = b"") -> None:
+        """One CTRL message: a json header plus an opaque binary blob."""
+        hdr = json.dumps(obj).encode()
+        self._send(KIND_CTRL, 0, struct.pack("<I", len(hdr)) + hdr + blob)
+
+    def recv_ctrl(self,
+                  timeout_s: Optional[float] = ...) -> Tuple[Dict, bytes]:
+        """Next CTRL message (skipping any stale DATA re-sends)."""
+        if timeout_s is not ...:
+            self._sock.settimeout(timeout_s)
+        try:
+            while not self._ctrl_pending:
+                kind, _, seq, body = self._recv_msg()
+                if kind == KIND_CTRL:
+                    self._ctrl_pending.append(body)
+                elif kind == KIND_DATA and seq < self._seq:
+                    self.dup_dropped += 1        # stale re-send, drop
+                else:
+                    raise errors.PayloadCorrupted(
+                        f"expected CTRL, got "
+                        f"{_KIND_NAMES.get(kind, kind)} seq {seq} while "
+                        f"at round {self._seq}")
+        finally:
+            if timeout_s is not ...:
+                self._sock.settimeout(self.timeout_s)
+        body = self._ctrl_pending.popleft()
+        (n,) = struct.unpack_from("<I", body)
+        hdr = json.loads(body[4:4 + n].decode())
+        return hdr, body[4 + n:]
+
+    def close(self) -> None:
+        try:
+            self._sock.shutdown(socket_lib.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+
+    def __enter__(self) -> "SocketComm":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,506 @@
+"""Real two-party deployment over TCP sockets (PR 7).
+
+Three layers:
+
+- transport unit behaviour (in-process, two threads on localhost):
+  handshake identity checks, swap round-trips, idempotent re-send
+  (dup-drop + receive cache), resumable timeouts, byte accounting;
+- full-stack parity (two threads): a private ResNet inference over
+  ``Session.connect`` sockets is bit-identical to the single-process
+  ``SimComm`` run on the same shares/triples, with measured wire bytes
+  equal to the framed schedule prediction exactly and measured
+  wall-clock under an injected RTT within the schedule's band;
+- deployment (two OS subprocesses via ``launch/party_host``): bit-exact
+  private inference from a job directory, and kill-a-party-mid-run →
+  restart → journal-resume producing bit-identical outputs.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, errors
+from repro.configs import RESNET_SMOKE
+from repro.core import beaver, comm as comm_lib, faults as faults_lib
+from repro.core.hummingbird import HBConfig, HBLayer
+from repro.models import resnet
+from repro.transport import (LinkShaper, SocketComm, free_port,
+                             parse_address, write_job)
+
+HOST = "127.0.0.1"
+
+
+# ---------------------------------------------------------------------------
+# helpers: a connected socket pair driven by two threads
+# ---------------------------------------------------------------------------
+
+def _pair(**kw):
+    """A handshaken (party0, party1) SocketComm pair on localhost."""
+    port = free_port()
+    out = {}
+
+    def _host():
+        out[0] = SocketComm.host((HOST, port), party=0, **kw)
+
+    t = threading.Thread(target=_host)
+    t.start()
+    out[1] = SocketComm.dial((HOST, port), party=1, **kw)
+    t.join(10.0)
+    return out[0], out[1]
+
+
+def _run_parties(fn0, fn1, timeout_s=180.0):
+    """Run one callable per party on its own thread; re-raise failures."""
+    results, errs = {}, {}
+
+    def _wrap(party, fn):
+        try:
+            results[party] = fn()
+        except BaseException as e:       # noqa: BLE001 — surfaced below
+            errs[party] = e
+
+    threads = [threading.Thread(target=_wrap, args=(p, f))
+               for p, f in ((0, fn0), (1, fn1))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout_s)
+    if errs:
+        raise next(iter(errs.values()))
+    assert not any(t.is_alive() for t in threads), "party thread hung"
+    return results[0], results[1]
+
+
+def _smoke_plan():
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)
+
+    def afn(p, v, relu_fn=None):
+        return resnet.apply(p, v, RESNET_SMOKE, relu_fn=relu_fn)
+
+    plan = api.trace_plan(afn, params, (2, 3, 8, 8), name="smoke")
+    hb = HBConfig(tuple([HBLayer(k=21, m=13)] * (plan.n_groups - 1)
+                        + [HBLayer(k=13, m=13)]),
+                  plan.group_elements)
+    return afn, params, plan.with_hb(hb)
+
+
+# ---------------------------------------------------------------------------
+# unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_parse_address():
+    assert parse_address("10.0.0.7:9100") == ("10.0.0.7", 9100)
+    assert parse_address(":9100") == ("127.0.0.1", 9100)
+    assert parse_address("example.org") == ("example.org", 9000)
+
+
+def test_link_shaper_matches_schedule_pricing():
+    from repro.api.plan import NETWORKS
+    wan = NETWORKS["wan"]
+    shaper = LinkShaper.from_preset(wan)
+    n = 4096
+    assert shaper.round_delay(n) == pytest.approx(
+        wan.rtt_s + 2 * n * 8 / wan.bandwidth_bps)
+    assert LinkShaper().round_delay(1 << 20) == 0.0
+
+
+def test_swap_roundtrip_and_byte_accounting():
+    s0, s1 = _pair(session="s", plan="p", timeout_s=10.0)
+    payload = {
+        0: {"a": jnp.arange(12, dtype=jnp.uint32).reshape(1, 3, 4),
+            "b": jnp.full((1, 5), 7, jnp.uint32)},
+        1: {"a": jnp.ones((1, 3, 4), jnp.uint32),
+            "b": jnp.arange(5, dtype=jnp.uint32).reshape(1, 5)},
+    }
+    try:
+        g0, g1 = _run_parties(lambda: s0.swap(payload[0]),
+                              lambda: s1.swap(payload[1]))
+        for got, want in ((g0, payload[1]), (g1, payload[0])):
+            for k in ("a", "b"):
+                np.testing.assert_array_equal(np.asarray(got[k]),
+                                              np.asarray(want[k]))
+        # payload-exact accounting: (12 + 5) uint32 words per direction,
+        # envelopes tracked separately (1 HELLO + 1 DATA each so far)
+        for s in (s0, s1):
+            assert s.n_swaps == s.n_rounds == 1
+            assert s.round_bytes == [17 * 4]
+            assert s.bytes_tx == 17 * 4
+            assert s.header_bytes == 2 * 16
+            assert s.negotiated["resume_round"] == 0
+    finally:
+        s0.close()
+        s1.close()
+
+
+def test_swap_rejects_wrong_dtype_and_party_dim():
+    s0, s1 = _pair(timeout_s=5.0)
+    try:
+        with pytest.raises(TypeError, match="uint32"):
+            s0.swap(jnp.zeros((1, 3), jnp.int32))
+        with pytest.raises(TypeError, match="party dim"):
+            s0.swap(jnp.zeros((2, 3), jnp.uint32))
+    finally:
+        s0.close()
+        s1.close()
+
+
+def test_handshake_rejects_session_mismatch():
+    port = free_port()
+    errs = {}
+
+    def _host():
+        try:
+            SocketComm.host((HOST, port), party=0, session="alpha",
+                            timeout_s=5.0)
+        except errors.HandshakeFailed as e:
+            errs[0] = e
+
+    t = threading.Thread(target=_host)
+    t.start()
+    with pytest.raises(errors.HandshakeFailed, match="session mismatch"):
+        SocketComm.dial((HOST, port), party=1, session="beta", timeout_s=5.0)
+    t.join(10.0)
+    assert 0 in errs
+
+
+def test_handshake_rejects_party_collision():
+    port = free_port()
+    errs = {}
+
+    def _host():
+        try:
+            SocketComm.host((HOST, port), party=0, timeout_s=5.0)
+        except errors.HandshakeFailed as e:
+            errs[0] = e
+
+    t = threading.Thread(target=_host)
+    t.start()
+    with pytest.raises(errors.HandshakeFailed, match="party"):
+        SocketComm.dial((HOST, port), party=0, timeout_s=5.0)
+    t.join(10.0)
+    assert 0 in errs
+
+
+def test_handshake_negotiates_journal_resume_round():
+    s0, s1 = _pair_journals(journal_len_a=7, journal_len_b=4)
+    try:
+        assert s0.negotiated["resume_round"] == 4
+        assert s1.negotiated["resume_round"] == 4
+        assert s0.negotiated["peer_journal_len"] == 4
+        assert s1.negotiated["peer_journal_len"] == 7
+    finally:
+        s0.close()
+        s1.close()
+
+
+def _pair_journals(journal_len_a, journal_len_b):
+    port = free_port()
+    out = {}
+
+    def _host():
+        out[0] = SocketComm.host((HOST, port), party=0,
+                                 journal_len=journal_len_a, timeout_s=5.0)
+
+    t = threading.Thread(target=_host)
+    t.start()
+    out[1] = SocketComm.dial((HOST, port), party=1,
+                             journal_len=journal_len_b, timeout_s=5.0)
+    t.join(10.0)
+    return out[0], out[1]
+
+
+def test_idempotent_resend_dup_drop_and_recv_cache():
+    """A local retry of an already-delivered round must not deadlock: the
+    re-send is dropped by the peer as a stale dup and the local receive is
+    served from the cache — the ResilientComm recovery contract."""
+    s0, s1 = _pair(timeout_s=10.0)
+    x0 = jnp.arange(6, dtype=jnp.uint32).reshape(1, 6)
+    x1 = jnp.arange(6, 12, dtype=jnp.uint32).reshape(1, 6)
+
+    def party0():
+        first = s0.swap(x0)
+        s0._seq -= 1                     # simulate a ResilientComm retry
+        again = s0.swap(x0)              # re-send + cached receive
+        second = s0.swap(x0 + 100)
+        return first, again, second
+
+    def party1():
+        a = s1.swap(x1)
+        b = s1.swap(x1 + 100)            # receives the dup first: dropped
+        return a, b
+
+    try:
+        (first, again, second), (a, b) = _run_parties(party0, party1)
+        np.testing.assert_array_equal(np.asarray(first), np.asarray(x1))
+        np.testing.assert_array_equal(np.asarray(again), np.asarray(x1))
+        np.testing.assert_array_equal(np.asarray(second),
+                                      np.asarray(x1 + 100))
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(x0 + 100))
+        assert s1.dup_dropped == 1
+        assert s0.n_swaps == 3           # the retry re-counts the round
+    finally:
+        s0.close()
+        s1.close()
+
+
+def test_resilient_comm_heals_real_socket_timeout():
+    """Party 1's recv deadline is shorter than party 0's think time, so
+    its first attempt times out mid-round; ResilientComm's idempotent
+    re-send + the resumable receive buffer heal it without desyncing."""
+    s0, s1 = _pair(timeout_s=10.0)
+    s1._sock.settimeout(0.15)
+    s1.timeout_s = 0.15
+    r0 = comm_lib.ResilientComm(s0, max_retries=3)
+    r1 = comm_lib.ResilientComm(s1, max_retries=10, backoff_s=0.01)
+    x0 = jnp.arange(8, dtype=jnp.uint32).reshape(1, 8)
+    x1 = jnp.arange(8, 16, dtype=jnp.uint32).reshape(1, 8)
+
+    def party0():
+        time.sleep(0.6)                  # stall past party 1's deadline
+        return r0.swap(x0)
+
+    try:
+        g0, g1 = _run_parties(party0, lambda: r1.swap(x1))
+        np.testing.assert_array_equal(np.asarray(g0)[0], np.asarray(x1)[0])
+        np.testing.assert_array_equal(np.asarray(g1)[0], np.asarray(x0)[0])
+        assert r1.retries >= 1
+        assert r1.recovered == 1
+        assert r1.faults_detected["timeout"] >= 1
+    finally:
+        s0.close()
+        s1.close()
+
+
+def test_injected_drop_heals_under_session_stack():
+    """A FaultInjectingComm drop between the socket and ResilientComm (a
+    lost send attempt) is healed by the retry budget; both parties finish
+    with identical transcripts."""
+    s0, s1 = _pair(timeout_s=10.0)
+    plan = faults_lib.FaultPlan((faults_lib.FaultEvent(round=1,
+                                                       kind="drop"),))
+    r0 = comm_lib.ResilientComm(faults_lib.FaultInjectingComm(plan, s0),
+                                max_retries=3, backoff_s=0.0)
+    r1 = comm_lib.ResilientComm(s1, max_retries=3)
+
+    def run(r, base):
+        outs = []
+        for i in range(3):
+            outs.append(np.asarray(r.swap(
+                jnp.full((1, 4), base + i, jnp.uint32))))
+        return outs
+
+    try:
+        g0, g1 = _run_parties(lambda: run(r0, 100), lambda: run(r1, 200))
+        for i in range(3):
+            assert (g0[i] == 200 + i).all()
+            assert (g1[i] == 100 + i).all()
+        assert r0.retries == 1 and r0.recovered == 1
+    finally:
+        s0.close()
+        s1.close()
+
+
+# ---------------------------------------------------------------------------
+# full-stack parity (threads): Session.connect + ResNet smoke inference
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_ref():
+    """Reference single-process run + everything both parties need."""
+    afn, params, plan = _smoke_plan()
+    model = api.compile(afn, params, RESNET_SMOKE, plan, api.Session(key=0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 8, 8)) * 0.5
+    X = model.encrypt(jax.random.PRNGKey(2), x)
+    pool = beaver.gen_plan_triples(jax.random.PRNGKey(3),
+                                   plan.triple_specs())
+    ref_model = api.compile(afn, params, RESNET_SMOKE, plan,
+                            api.Session(key=0,
+                                        provider=beaver.TriplePool(pool)))
+    want = ref_model(X, key=jax.random.PRNGKey(4))
+    return dict(afn=afn, params=params, plan=plan, x=x, X=X, pool=pool,
+                want=want)
+
+
+def _connected_party(ref, party, port, *, shaper=None, journal=None,
+                     timeout_s=60.0):
+    from repro.core.mpc_tensor import MPCTensor
+    from repro.core import ring
+    plan = ref["plan"]
+    session = api.Session.connect(
+        party,
+        listen=(HOST, port) if party == 0 else None,
+        peer=(HOST, port) if party == 1 else None,
+        key=0, session_id="smoke-test", plan_digest=plan.digest(),
+        provider=beaver.TriplePool(
+            beaver.slice_party_pool(ref["pool"], party)),
+        journal=journal, shaper=shaper, timeout_s=timeout_s,
+        handshake_timeout_s=60.0)
+    model = api.compile(ref["afn"], ref["params"], RESNET_SMOKE, plan,
+                        session)
+    X = ref["X"]
+    Xp = MPCTensor(ring.Ring64(X.data.lo[party:party + 1],
+                               X.data.hi[party:party + 1]), X.frac_bits)
+    out = model(Xp, key=jax.random.PRNGKey(4))
+    return out, session
+
+
+def test_socket_inference_bit_identical_and_bytes_framed(smoke_ref):
+    """Acceptance: the two-party socket run reproduces the SimComm run
+    bit-identically on the same shares/triples, and the measured wire
+    bytes equal the framed schedule prediction exactly, round for
+    round."""
+    port = free_port()
+    (out0, sess0), (out1, sess1) = _run_parties(
+        lambda: _connected_party(smoke_ref, 0, port),
+        lambda: _connected_party(smoke_ref, 1, port))
+    try:
+        want = smoke_ref["want"]
+        lo = np.concatenate([out0.data.lo, out1.data.lo], 0)
+        hi = np.concatenate([out0.data.hi, out1.data.hi], 0)
+        np.testing.assert_array_equal(lo, np.asarray(want.data.lo))
+        np.testing.assert_array_equal(hi, np.asarray(want.data.hi))
+
+        framed = smoke_ref["plan"].schedule().framed()
+        for sess in (sess0, sess1):
+            sock = sess.transport
+            assert sock.n_swaps == framed.n_rounds
+            assert sock.round_bytes == list(framed.round_bytes)
+    finally:
+        sess0.transport.close()
+        sess1.transport.close()
+
+
+def test_socket_wall_clock_within_schedule_band_under_injected_rtt(
+        smoke_ref):
+    """Under an injected RTT the measured wall-clock is bounded below by
+    the schedule's latency prediction (the shaper paces each round to
+    exactly the predicted per-round cost) and above by a generous
+    compute-inclusive band."""
+    rtt_s = 0.004
+    shaper = LinkShaper(rtt_s=rtt_s)
+    framed = smoke_ref["plan"].schedule().framed()
+    predicted = framed.latency(float("inf"), rtt_s)
+    port = free_port()
+    t0 = time.monotonic()
+    (out0, sess0), (out1, sess1) = _run_parties(
+        lambda: _connected_party(smoke_ref, 0, port, shaper=shaper),
+        lambda: _connected_party(smoke_ref, 1, port, shaper=shaper))
+    wall = time.monotonic() - t0
+    try:
+        assert predicted > 0
+        assert wall >= predicted, (wall, predicted)
+        assert wall <= 20 * predicted + 30.0, (wall, predicted)
+    finally:
+        sess0.transport.close()
+        sess1.transport.close()
+
+
+# ---------------------------------------------------------------------------
+# deployment: two OS processes via launch/party_host + a job directory
+# ---------------------------------------------------------------------------
+
+def _write_smoke_job(job_dir, ref):
+    write_job(job_dir, plan=ref["plan"], config="smoke", params_seed=0,
+              infer_key=4, session_seed=0, x=ref["X"], pool=ref["pool"])
+
+
+def _spawn_party(job_dir, party, port, *extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    link = (["--listen", f"{HOST}:{port}"] if party == 0
+            else ["--peer", f"{HOST}:{port}"])
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.party_host",
+         "--party", str(party), "--job", str(job_dir), *link, *extra],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+
+
+def _wait(procs, timeout_s=600.0):
+    outs = []
+    for p in procs:
+        try:
+            out, err = p.communicate(timeout=timeout_s)
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            raise
+        outs.append((p.returncode, out, err))
+    return outs
+
+
+def _combined_out(job_dir):
+    rows = []
+    for p in (0, 1):
+        with np.load(os.path.join(job_dir, f"out{p}.npz")) as z:
+            rows.append((z["lo"], z["hi"]))
+    return (np.concatenate([r[0] for r in rows], 0),
+            np.concatenate([r[1] for r in rows], 0))
+
+
+def test_two_process_inference_bit_identical_to_sim(smoke_ref, tmp_path):
+    """Acceptance: two OS processes complete a private ResNet inference
+    over localhost TCP, bit-identical to the single-process SimComm run
+    on the same shares/triples, with wire bytes equal to the framed
+    schedule on both sides."""
+    job = tmp_path / "job"
+    _write_smoke_job(job, smoke_ref)
+    procs = [_spawn_party(job, 0, port := free_port()),
+             _spawn_party(job, 1, port)]
+    res = _wait(procs)
+    for rc, out, err in res:
+        assert rc == 0, (rc, out[-2000:], err[-4000:])
+    lo, hi = _combined_out(job)
+    want = smoke_ref["want"]
+    np.testing.assert_array_equal(lo, np.asarray(want.data.lo))
+    np.testing.assert_array_equal(hi, np.asarray(want.data.hi))
+    framed = smoke_ref["plan"].schedule().framed()
+    for p in (0, 1):
+        stats = json.loads((job / f"stats{p}.json").read_text())
+        assert stats["rounds"] == framed.n_rounds
+        assert stats["payload_bytes"] == framed.bytes_tx
+        assert stats["replayed"] == 0
+        assert stats["retries"] == 0
+
+
+def test_kill_party_mid_run_then_journal_resume(smoke_ref, tmp_path):
+    """Acceptance: party 0 is hard-killed (os._exit, no cleanup) after 5
+    live rounds; party 1 exits with the restart code; both relaunch with
+    the same arguments and resume from their journals — replaying the
+    negotiated common prefix without touching the wire — and the final
+    outputs are bit-identical to an uninterrupted run."""
+    job = tmp_path / "job"
+    _write_smoke_job(job, smoke_ref)
+    j0, j1 = str(tmp_path / "j0"), str(tmp_path / "j1")
+    port = free_port()
+    procs = [_spawn_party(job, 0, port, "--journal", j0,
+                          "--die-after-round", "5"),
+             _spawn_party(job, 1, port, "--journal", j1)]
+    res = _wait(procs)
+    assert res[0][0] == 42, res[0]            # the simulated kill -9
+    assert res[1][0] == 17, res[1]            # restartable peer-crash exit
+
+    port = free_port()
+    procs = [_spawn_party(job, 0, port, "--journal", j0),
+             _spawn_party(job, 1, port, "--journal", j1)]
+    res = _wait(procs)
+    for rc, out, err in res:
+        assert rc == 0, (rc, out[-2000:], err[-4000:])
+    lo, hi = _combined_out(job)
+    want = smoke_ref["want"]
+    np.testing.assert_array_equal(lo, np.asarray(want.data.lo))
+    np.testing.assert_array_equal(hi, np.asarray(want.data.hi))
+    framed = smoke_ref["plan"].schedule().framed()
+    for p in (0, 1):
+        stats = json.loads((job / f"stats{p}.json").read_text())
+        # journals negotiated to the common 5-round prefix: both parties
+        # replayed exactly those rounds and ran the rest live
+        assert stats["resume_round"] == 5
+        assert stats["replayed"] == 5
+        assert stats["rounds"] == framed.n_rounds - 5
