@@ -203,6 +203,33 @@ def quick(out_path: str = "BENCH_relu.json") -> dict:
         "wall_s": round(wall_engine, 4),
     }
 
+    # protocol-safety counters (the hbcheck gate): non-baselined AST-lint
+    # + lock-discipline findings over src/tests, and the canonical ResNet
+    # serve_step leakage census — zero collectives may carry an unmasked
+    # secret share (needs the 2-device party axis; None on 1 device).
+    # --check fails on any finding or unmasked collective.
+    from repro.analysis import lint as hb_lint
+    from repro.analysis import locks as hb_locks
+    from repro.analysis import taint as hb_taint
+
+    hb_findings = hb_lint.lint_paths(
+        [os.path.join(_ROOT, "src"), os.path.join(_ROOT, "tests")],
+        root=_ROOT)
+    hb_findings += hb_locks.check_paths(_ROOT)
+    hb_baseline = hb_lint.load_baseline(
+        os.path.join(_ROOT, "tools", "hbcheck_baseline.json"))
+    hb_new = [f for f in hb_findings if f.key() not in hb_baseline]
+    taint_summary = {}
+    if jax.device_count() >= 2:
+        taint_summary = hb_taint.canonical_resnet_census()
+    results["hbcheck"] = {
+        "hbcheck_findings": len(hb_new),
+        "baselined_findings": len(hb_findings) - len(hb_new),
+        "unmasked_collectives": taint_summary.get("unmasked_collectives"),
+        "taint_collectives": taint_summary.get("collectives"),
+        "taint_cross_check_ok": taint_summary.get("cross_check_ok"),
+    }
+
     results["multigroup"] = {
         **mesh_census,
         "groups": [{"n": n, "k": k, "m": m} for n, k, m in specs],
@@ -578,6 +605,25 @@ def check(path: str = "BENCH_relu.json") -> int:
             failures.append(
                 f"multigroup: mesh-lowered collective bytes {mesh_bytes} "
                 f"!= schedule-predicted {mg.get('sched_bytes_pred')}")
+    # hbcheck gate (present once --quick ran with the analysis suite):
+    # zero non-baselined protocol-safety findings and zero unmasked-secret
+    # collectives in the canonical serve_step lowering
+    hb = data.get("hbcheck")
+    if hb is not None:
+        if hb.get("hbcheck_findings", 0) != 0:
+            failures.append(
+                f"hbcheck: {hb.get('hbcheck_findings')} non-baselined "
+                f"protocol-safety findings (run `python -m "
+                f"repro.analysis.hbcheck src tests` for the list)")
+        unmasked = hb.get("unmasked_collectives")
+        if unmasked not in (None, 0):
+            failures.append(
+                f"hbcheck: {unmasked} collective(s) in the serve_step "
+                f"lowering carry an unmasked secret share")
+        if hb.get("taint_cross_check_ok") is False:
+            failures.append(
+                "hbcheck: taint census walked a different collective set "
+                "than collective_census (parser drift)")
     # chaos gate (present once --chaos ran): recovery must be invisible —
     # bit-identical outputs, and every recovery action accounted against
     # the injected plan exactly (transients healed by re-send, the crash
@@ -650,6 +696,11 @@ def check(path: str = "BENCH_relu.json") -> int:
           + (f"; mesh HLO census {mesh_rounds} collective-permutes / "
              f"{mesh_bytes} B == schedule" if mesh_rounds is not None
              else " (no mesh census: single device)"))
+    if hb is not None:
+        print(f"hbcheck gate OK: {hb.get('hbcheck_findings')} findings, "
+              f"{hb.get('unmasked_collectives')} unmasked collectives "
+              f"of {hb.get('taint_collectives')} in the serve_step "
+              f"lowering")
     if ch is not None:
         print(f"chaos gate OK: bit-identical under "
               f"{sum(ch['injected'].values())} injected faults "

@@ -1,0 +1,27 @@
+"""Protocol-safety static analysis (``hbcheck``).
+
+Three machine checks of the invariants HummingBird's security argument
+rests on (docs/analysis.md is the catalog):
+
+- ``analysis.lint`` — AST rules R001-R006 over ``src/repro``: raw
+  exchanges stay inside the comm seam, reveals inside the approved API
+  surface, no secret-dependent Python control flow, session-derived
+  PRNG keys only, uint32 ring discipline, deterministic round path.
+- ``analysis.taint`` — HLO leakage census: a dataflow taint pass over
+  the compiled ``serve_step`` proving every collective-permute operand
+  is mask/triple-derived (zero unmasked-secret collectives).
+- ``analysis.locks`` — lock discipline for the serving engine's
+  pump-thread state.
+
+CLI gate (CI runs it before the round gate)::
+
+    python -m repro.analysis.hbcheck src tests --check
+
+This package stays import-light: ``lint``/``locks`` are stdlib-only,
+``taint`` imports jax lazily (so the CLI can set XLA device flags
+first).
+"""
+from repro.analysis.lint import (Finding, lint_paths,  # noqa: F401
+                                 lint_source, load_baseline, save_baseline)
+from repro.analysis.locks import (check_lock_discipline,  # noqa: F401
+                                  check_private_reach)

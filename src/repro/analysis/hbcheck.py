@@ -1,0 +1,153 @@
+"""hbcheck CLI: the protocol-safety gate.
+
+Runs, in one invocation (see docs/analysis.md):
+
+1. the AST protocol linter (rules R001-R006, ``analysis.lint``) over the
+   given paths,
+2. the lock-discipline checker for the serving engine/frontend
+   (``analysis.locks``),
+3. the HLO leakage census on the canonical ResNet ``serve_step``
+   lowering (``analysis.taint``; needs jax — skipped with a notice if
+   unavailable, forced onto 2 host devices otherwise),
+4. ``ruff check`` with the repo's pyproject config, when ruff is
+   installed (third-party import/unused-code hygiene shares this gate).
+
+Usage::
+
+    python -m repro.analysis.hbcheck src tests --check
+
+``--check`` makes the exit code a gate: non-zero on any non-baselined
+finding, any unmasked collective, or a ruff failure.  Without it the
+run only reports.  ``--update-baseline`` rewrites
+``tools/hbcheck_baseline.json`` with the current findings (grandfather
+them — to be burned down, not grown).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import shutil
+import subprocess
+import sys
+from typing import List
+
+from repro.analysis import lint as lint_lib
+from repro.analysis import locks as locks_lib
+
+DEFAULT_BASELINE = "tools/hbcheck_baseline.json"
+
+
+def _run_taint() -> dict:
+    """Canonical-ResNet leakage census; returns a summary dict or a
+    ``{"skipped": reason}`` marker when the environment can't run it."""
+    try:
+        import jax  # noqa: F401
+    except Exception as e:                      # pragma: no cover - no jax
+        return {"skipped": f"jax unavailable ({e})"}
+    # force a real 2-device party axis before the backend initializes
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=2")
+    from repro.analysis import taint as taint_lib
+    try:
+        return taint_lib.canonical_resnet_census()
+    except RuntimeError as e:
+        return {"skipped": str(e)}
+
+
+def _run_ruff(paths: List[str]) -> dict:
+    if shutil.which("ruff") is None:
+        return {"skipped": "ruff not installed"}
+    proc = subprocess.run(["ruff", "check", *paths],
+                          capture_output=True, text=True)
+    return {"returncode": proc.returncode,
+            "output": (proc.stdout + proc.stderr).strip()}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.hbcheck",
+        description="HummingBird protocol-safety static analysis gate")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: src tests)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero on any non-baselined finding, "
+                         "unmasked collective, or ruff failure")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"grandfathered-findings file "
+                         f"(default {DEFAULT_BASELINE})")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline with the current findings")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable report on stdout")
+    ap.add_argument("--no-taint", action="store_true",
+                    help="skip the HLO leakage census (compiles the "
+                         "canonical ResNet serve step)")
+    ap.add_argument("--no-locks", action="store_true",
+                    help="skip the serve-engine lock-discipline check")
+    ap.add_argument("--no-ruff", action="store_true",
+                    help="skip the ruff hygiene pass")
+    args = ap.parse_args(argv)
+    paths = args.paths or ["src", "tests"]
+
+    findings = lint_lib.lint_paths(paths)
+    if not args.no_locks:
+        findings.extend(locks_lib.check_paths("."))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+
+    if args.update_baseline:
+        lint_lib.save_baseline(args.baseline, findings)
+        print(f"baseline rewritten: {len(findings)} entries -> "
+              f"{args.baseline}")
+        return 0
+
+    baseline = lint_lib.load_baseline(args.baseline)
+    new = [f for f in findings if f.key() not in baseline]
+    baselined = len(findings) - len(new)
+
+    taint = {"skipped": "--no-taint"} if args.no_taint else _run_taint()
+    ruff = {"skipped": "--no-ruff"} if args.no_ruff else _run_ruff(paths)
+
+    unmasked = taint.get("unmasked_collectives")
+    taint_bad = (unmasked not in (None, 0)
+                 or taint.get("cross_check_ok") is False)
+    ruff_bad = ruff.get("returncode", 0) != 0
+    failed = bool(new) or taint_bad or ruff_bad
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [vars(f) for f in new],
+            "baselined": baselined,
+            "taint": taint,
+            "ruff": ruff,
+            "ok": not failed,
+        }, indent=1))
+    else:
+        for f in new:
+            print(f)
+        if ruff_bad:
+            print(ruff["output"])
+        status = []
+        status.append(f"lint+locks: {len(new)} finding(s)"
+                      + (f" ({baselined} baselined)" if baselined else ""))
+        if "skipped" in taint:
+            status.append(f"taint census: skipped ({taint['skipped']})")
+        else:
+            status.append(
+                f"taint census: {taint['collectives']} collectives, "
+                f"{unmasked} unmasked, cross-check "
+                f"{'ok' if taint.get('cross_check_ok') else 'FAILED'}")
+        if "skipped" in ruff:
+            status.append(f"ruff: skipped ({ruff['skipped']})")
+        else:
+            status.append("ruff: " + ("ok" if not ruff_bad else "FAILED"))
+        print("hbcheck: " + "; ".join(status))
+
+    if args.check and failed:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,342 @@
+"""HLO leakage census: a dataflow taint pass over compiled serve-step
+programs proving no collective ever carries an unmasked secret share.
+
+The GMW round seam guarantees that every wire payload is either pure
+session randomness (the a2b preparation round) or a secret blinded by a
+Beaver triple / session-derived mask (``d = x ^ a``).  This module
+checks the *compiled artifact* for that property: it walks the lowered
+HLO of ``PrivateModel.serve_step(mesh)`` (reusing
+``runtime.hlo_analyzer``'s parser and call-graph walk) carrying three
+boolean flags per value:
+
+- ``secret`` — the value depends on a share input (the ``lo``/``hi``
+  limbs of the request tensor),
+- ``mask`` — the value depends on masking material (the Beaver triple
+  pool or a session PRNG key input),
+- ``unsafe`` — the value *contains an element* that is secret-derived
+  with no mask in its lineage.
+
+Propagation distinguishes element-mixing ops (add/xor/mul/...: the
+output recomputes ``unsafe = secret and not mask`` from the unioned
+flags — xor-ing a mask onto a secret yields a safe value) from
+element-preserving data movement (concatenate/tuple/reshape/slice/...:
+``unsafe`` is the OR of the operands' — packing a raw share next to a
+masked one does NOT launder it).  Every ``collective-permute`` operand
+is recorded with its flags; the census must report **zero unmasked
+collectives** on the canonical ResNet plans and its total count must
+equal ``collective_census``'s (cross-check).
+
+This is a structural one-sided check, not an information-flow proof:
+mask *cancellation* (``x ^ r ^ r``) is not tracked, so a value that
+re-exposes a secret by reusing its mask still counts as masked.  It
+exists to catch the realistic failure class — a refactor that sends a
+share on the wire without ever touching the triple/key inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.runtime.hlo_analyzer import (_BODY_RE, _BRANCHES_RE, _CALLS_RE,
+                                        _TRIP_RE, COLLECTIVES, HloAnalysis,
+                                        OpInfo)
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+
+
+# ---------------------------------------------------------------------------
+# flags
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Flags:
+    secret: bool = False
+    mask: bool = False
+    unsafe: bool = False
+
+    def union(self, other: "Flags") -> "Flags":
+        return Flags(self.secret | other.secret, self.mask | other.mask,
+                     self.unsafe | other.unsafe)
+
+
+PUBLIC = Flags()
+SECRET = Flags(secret=True, unsafe=True)
+MASK = Flags(mask=True)
+
+
+def _union(flags: Sequence[Flags]) -> Flags:
+    out = PUBLIC
+    for f in flags:
+        out = out.union(f)
+    return out
+
+
+# element-preserving data movement: output elements ARE (a subset /
+# rearrangement of) input elements, so unsafety survives verbatim
+_PRESERVING = frozenset({
+    "tuple", "get-tuple-element", "concatenate", "reshape", "transpose",
+    "slice", "dynamic-slice", "dynamic-update-slice", "broadcast", "copy",
+    "copy-start", "copy-done", "convert", "bitcast-convert", "pad",
+    "reverse", "gather", "optimization-barrier", "all-gather",
+})
+
+# flag-free sources
+_PUBLIC_SOURCES = frozenset({
+    "constant", "iota", "partition-id", "replica-id", "after-all",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveTaint:
+    """One collective instruction with the taint flags of its operand.
+
+    ``count`` carries while-loop trip scaling (same convention as
+    ``hlo_analyzer.CollectiveOp.count``)."""
+
+    kind: str
+    comp: str
+    name: str
+    count: int
+    secret: bool
+    mask: bool
+    unsafe: bool
+
+
+# ---------------------------------------------------------------------------
+# the pass
+# ---------------------------------------------------------------------------
+
+class TaintAnalysis:
+    """Taint walk over one HLO module (text as parsed by
+    ``runtime.hlo_analyzer.HloAnalysis``)."""
+
+    def __init__(self, hlo_text: str):
+        self.h = HloAnalysis(hlo_text)
+        self._parsed: Dict[str, Tuple[Dict[str, str], List[OpInfo]]] = {}
+
+    def _ops(self, comp: str):
+        if comp not in self._parsed:
+            self._parsed[comp] = self.h._ops(comp)
+        return self._parsed[comp]
+
+    def census(self, secret_params: Sequence[int] = (),
+               mask_params: Sequence[int] = (),
+               kinds: Sequence[str] = ("collective-permute",),
+               ) -> List[CollectiveTaint]:
+        """Walk the entry computation with the given entry-parameter
+        classification (indices into the flattened jit argument list;
+        everything else is public) and return every matching collective
+        with its operand's flags, in program order."""
+        entry = self.h.entry
+        if entry is None:
+            return []
+        _, ops = self._ops(entry)
+        n_params = 0
+        for op in ops:
+            if op.kind == "parameter":
+                m = _PARAM_IDX_RE.search(op.line)
+                if m:
+                    n_params = max(n_params, int(m.group(1)) + 1)
+        secret_set, mask_set = set(secret_params), set(mask_params)
+        param_flags = tuple(
+            Flags(secret=i in secret_set, mask=i in mask_set,
+                  unsafe=(i in secret_set and i not in mask_set))
+            for i in range(n_params))
+        records: List[CollectiveTaint] = []
+        self._analyze(entry, param_flags, 1, records, frozenset(kinds),
+                      record=True)
+        return records
+
+    # -- one computation -----------------------------------------------------
+    def _analyze(self, comp: str, param_flags: Tuple[Flags, ...],
+                 scale: int, records: List[CollectiveTaint],
+                 kinds: frozenset, record: bool) -> Flags:
+        if comp not in self.h.computations:
+            return PUBLIC
+        _, ops = self._ops(comp)
+        env: Dict[str, Flags] = {}
+        root = PUBLIC
+        for op in ops:
+            f = self._op_flags(op, comp, env, param_flags, scale, records,
+                               kinds, record)
+            env[op.name] = f
+            root = f                      # HLO lists ROOT last
+        return root
+
+    def _op_flags(self, op: OpInfo, comp: str, env: Dict[str, Flags],
+                  param_flags: Tuple[Flags, ...], scale: int,
+                  records: List[CollectiveTaint], kinds: frozenset,
+                  record: bool) -> Flags:
+        kind = op.kind
+        ins = [env.get(o, PUBLIC) for o in op.operands]
+        agg = _union(ins)
+
+        if kind == "parameter":
+            m = _PARAM_IDX_RE.search(op.line)
+            idx = int(m.group(1)) if m else -1
+            return param_flags[idx] if 0 <= idx < len(param_flags) \
+                else PUBLIC
+        if kind in _PUBLIC_SOURCES:
+            return PUBLIC
+        if kind in ("rng", "rng-bit-generator"):
+            return MASK
+
+        # collectives: record the operand's flags at the exchange point
+        base = kind[:-len("-start")] if kind.endswith("-start") else kind
+        if base in COLLECTIVES and not kind.endswith("-done"):
+            opnd = ins[0] if ins else PUBLIC
+            if record and base in kinds:
+                records.append(CollectiveTaint(
+                    base, comp, op.name, scale, opnd.secret, opnd.mask,
+                    opnd.unsafe))
+            return opnd
+        if kind.endswith("-done"):
+            return agg
+
+        # call graph
+        if kind == "fusion":
+            m = _CALLS_RE.search(op.line)
+            if m:
+                return self._analyze(m.group(1), tuple(ins), scale,
+                                     records, kinds, record)
+            return agg
+        if kind == "call":
+            m = _TO_APPLY_RE.search(op.line)
+            if m:
+                return self._analyze(m.group(1), tuple(ins), scale,
+                                     records, kinds, record)
+            return agg
+        if kind == "while":
+            trips = 1
+            tm = _TRIP_RE.search(op.line)
+            if tm:
+                trips = int(tm.group(1))
+            bm = _BODY_RE.search(op.line)
+            if not bm:
+                return agg
+            body = bm.group(1)
+            # loop-carried flags to a fixpoint (monotone, so this
+            # terminates in <= 3 steps), then one recorded pass with the
+            # stable flags scaled by the trip count
+            cur = ins[0] if ins else PUBLIC
+            for _ in range(8):
+                out = self._analyze(body, (cur,), scale, [], kinds,
+                                    record=False)
+                new = cur.union(out)
+                if new == cur:
+                    break
+                cur = new
+            return self._analyze(body, (cur,), scale * trips, records,
+                                 kinds, record)
+        if kind == "conditional":
+            bm = _BRANCHES_RE.search(op.line)
+            if not bm:
+                return agg
+            branches = [b.strip().lstrip("%") for b in bm.group(1).split(",")
+                        if b.strip()]
+            outs = []
+            for i, b in enumerate(branches):
+                arg = ins[i + 1] if i + 1 < len(ins) else PUBLIC
+                outs.append(self._analyze(b, (arg,), scale, records, kinds,
+                                          record))
+            return _union(outs) if outs else agg
+
+        if kind in _PRESERVING:
+            return agg            # unsafe = OR of operands, via union
+        # element-mixing default (add/xor/mul/select/dot/custom-call/...):
+        # mixing a mask into a secret blinds it
+        return Flags(agg.secret, agg.mask, agg.secret and not agg.mask)
+
+
+# ---------------------------------------------------------------------------
+# summaries
+# ---------------------------------------------------------------------------
+
+def census_summary(hlo_text: str, secret_params: Sequence[int],
+                   mask_params: Sequence[int]) -> Dict:
+    """Taint census + cross-check against ``collective_census``.
+
+    Returns ``collectives`` (taint-walk count), ``unmasked_collectives``
+    (the gate: must be 0), ``masked``/``public`` breakdown, and
+    ``cross_check_ok`` (taint count == plain census count — both walks
+    must visit the same instructions)."""
+    from repro.runtime.hlo_analyzer import collective_census
+
+    recs = TaintAnalysis(hlo_text).census(secret_params, mask_params)
+    total = sum(r.count for r in recs)
+    unmasked = sum(r.count for r in recs if r.unsafe)
+    masked = sum(r.count for r in recs if r.secret and not r.unsafe)
+    public = sum(r.count for r in recs if not r.secret)
+    plain = sum(c.count for c in collective_census(hlo_text))
+    return {
+        "collectives": total,
+        "unmasked_collectives": unmasked,
+        "masked_collectives": masked,
+        "public_collectives": public,
+        "cross_check_total": plain,
+        "cross_check_ok": total == plain,
+    }
+
+
+def classify_serve_step_params(params, pool) -> Tuple[List[int], List[int]]:
+    """Entry-parameter classification for a ``serve_step`` lowering
+    ``jit(step).lower(params, lo, hi, pool, key)``: jit flattens the
+    argument pytree in order, so the share limbs sit right after the
+    model parameters and the key comes last."""
+    import jax
+
+    n_model = len(jax.tree_util.tree_leaves(params))
+    n_pool = len(jax.tree_util.tree_leaves(pool))
+    secret = [n_model, n_model + 1]
+    mask = list(range(n_model + 2, n_model + 2 + n_pool)) \
+        + [n_model + 2 + n_pool]
+    return secret, mask
+
+
+def canonical_resnet_census() -> Dict:
+    """The acceptance census: lower the canonical smoke-ResNet
+    ``serve_step`` mesh-natively (party axis of size 2 — requires >= 2
+    jax devices, e.g. ``--xla_force_host_platform_device_count=2``) and
+    run the taint census on the compiled HLO.  Same fixture seeds as
+    benchmarks/run.py and tests/test_mesh_serving.py."""
+    import jax
+
+    if jax.device_count() < 2:
+        raise RuntimeError(
+            "canonical_resnet_census needs >= 2 devices for a real party "
+            "axis; set XLA_FLAGS=--xla_force_host_platform_device_count=2 "
+            "before jax initializes")
+
+    from repro import api
+    from repro.configs import RESNET_SMOKE
+    from repro.core import beaver
+    from repro.core.hummingbird import HBConfig, HBLayer
+    from repro.launch.mesh import make_mpc_mesh
+    from repro.models import resnet
+
+    # canonical benchmark fixture seeds, shared with benchmarks/run.py
+    params = resnet.init(jax.random.PRNGKey(0), RESNET_SMOKE)  # hbcheck: disable=R004
+
+    def afn(p, v, relu_fn=None):
+        return resnet.apply(p, v, RESNET_SMOKE, relu_fn=relu_fn)
+
+    plan = api.trace_plan(afn, params, (2, 3, 8, 8), name="smoke")
+    plan = plan.with_hb(HBConfig(
+        tuple([HBLayer(k=21, m=13)] * (plan.n_groups - 1)
+              + [HBLayer(k=13, m=13)]), plan.group_elements))
+    model = api.compile(afn, params, RESNET_SMOKE, plan, api.Session(key=0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 8, 8)) * 0.5  # hbcheck: disable=R004
+    X = model.encrypt(jax.random.PRNGKey(2), x)  # hbcheck: disable=R004
+    pool = beaver.gen_plan_triples(jax.random.PRNGKey(3), plan.triple_specs())  # hbcheck: disable=R004
+    key = jax.random.PRNGKey(4)  # hbcheck: disable=R004
+
+    mesh = make_mpc_mesh()
+    step = model.serve_step(mesh)
+    compiled = jax.jit(step).lower(params, X.data.lo, X.data.hi, pool,
+                                   key).compile()
+    secret, mask = classify_serve_step_params(params, pool)
+    summary = census_summary(compiled.as_text(), secret, mask)
+    summary["sched_rounds"] = model.schedule().n_rounds
+    return summary

@@ -20,12 +20,14 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import pathlib
 from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro import errors
 from repro.core import schedule as schedule_lib
 from repro.core.costmodel import CommCost
 from repro.core.hummingbird import HBConfig
@@ -236,6 +238,79 @@ class Plan:
                     input_shape=tuple(int(s) for s in d["input_shape"]),
                     cone=bool(d["cone"]), name=str(d.get("name", "")))
 
+    def validate(self) -> "Plan":
+        """Static pre-flight of a loaded/JSON plan: every schedule
+        invariant that can be checked without running a protocol round.
+        Returns ``self`` (chainable); raises ``errors.PlanInvalid`` on:
+
+        - a per-group ``(k, m)`` outside ``0 <= m <= k <= 64``, or a
+          layers/group_elements length mismatch;
+        - a call referencing a group the HB config doesn't carry, or
+          whose ``n_elements`` disagrees with its shape;
+        - group element accounting drift (summed per-call elements vs
+          ``hb.group_elements`` — the triple budget and the search's
+          byte accounting both read the latter);
+        - triple-spec drift vs ``beaver.gen_plan_triples``'s contract
+          (one ``(n_elements, width)`` bundle per call, widths in
+          ``[0, 64]``);
+        - round non-conservation: the composed ``schedule()`` timeline
+          must equal the per-call ``core.schedule.simulate`` timelines
+          summed round-for-round and byte-for-byte.
+
+        ``Plan.load`` validates automatically; call this directly on
+        plans received over other channels (handshakes, request bodies).
+        """
+        hb = self.hb
+        if len(hb.layers) != len(hb.group_elements):
+            raise errors.PlanInvalid(
+                f"plan {self.name!r}: {len(hb.layers)} HB layers vs "
+                f"{len(hb.group_elements)} group element counts")
+        for g, layer in enumerate(hb.layers):
+            if not 0 <= layer.m <= layer.k <= 64:
+                raise errors.PlanInvalid(
+                    f"plan {self.name!r}: group {g} has (k={layer.k}, "
+                    f"m={layer.m}) outside 0 <= m <= k <= 64")
+        per_group = [0] * self.n_groups
+        for i, c in enumerate(self.calls):
+            if not 0 <= c.group < self.n_groups:
+                raise errors.PlanInvalid(
+                    f"plan {self.name!r}: call {i} references group "
+                    f"{c.group} but the HB config has {self.n_groups}")
+            if c.n_elements < 0 or c.n_elements != math.prod(c.shape):
+                raise errors.PlanInvalid(
+                    f"plan {self.name!r}: call {i} claims {c.n_elements} "
+                    f"elements but shape {c.shape} has "
+                    f"{math.prod(c.shape)}")
+            per_group[c.group] += c.n_elements
+        if self.calls and tuple(per_group) != tuple(self.group_elements):
+            raise errors.PlanInvalid(
+                f"plan {self.name!r}: per-call element sums {per_group} "
+                f"!= hb.group_elements {list(self.group_elements)} (triple "
+                f"budgets and search byte accounting would drift)")
+        for i, ((n, w), c) in enumerate(zip(self.triple_specs(),
+                                            self.calls)):
+            if n != c.n_elements or w != hb.layers[c.group].width \
+                    or not 0 <= w <= 64:
+                raise errors.PlanInvalid(
+                    f"plan {self.name!r}: triple spec {i} is ({n}, {w}), "
+                    f"expected ({c.n_elements}, "
+                    f"{hb.layers[c.group].width}) — gen_plan_triples "
+                    f"would produce the wrong pool")
+        if self.calls:
+            total = self.schedule()
+            rounds = bytes_tx = 0
+            for spec in self.call_specs():
+                per_call = schedule_lib.simulate([spec], cone=self.cone)
+                rounds += per_call.n_rounds
+                bytes_tx += per_call.bytes_tx
+            if (total.n_rounds, total.bytes_tx) != (rounds, bytes_tx):
+                raise errors.PlanInvalid(
+                    f"plan {self.name!r}: composed schedule "
+                    f"({total.n_rounds} rounds, {total.bytes_tx} B) != "
+                    f"per-call sum ({rounds} rounds, {bytes_tx} B) — "
+                    f"round conservation violated")
+        return self
+
     def digest(self) -> str:
         """Short stable content hash of the plan (canonical JSON).  The
         transport handshake exchanges it so two party processes refuse to
@@ -250,7 +325,14 @@ class Plan:
 
     @staticmethod
     def load(path) -> "Plan":
-        return Plan.from_json(json.loads(pathlib.Path(path).read_text()))
+        """Load + statically validate a saved plan (``validate()``);
+        malformed JSON/fields surface as typed ``errors.PlanInvalid``."""
+        try:
+            plan = Plan.from_json(json.loads(pathlib.Path(path).read_text()))
+        except (KeyError, ValueError, TypeError, AssertionError) as e:
+            raise errors.PlanInvalid(
+                f"malformed plan file {path}: {e}") from e
+        return plan.validate()
 
     @staticmethod
     def from_hb(hb: HBConfig, cone: bool = False, name: str = "") -> "Plan":

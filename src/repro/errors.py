@@ -104,6 +104,13 @@ class ShapeMismatch(FatalError, ValueError):
     """An input shape the compiled model/plan cannot serve."""
 
 
+class PlanInvalid(FatalError, ValueError):
+    """A loaded/JSON Plan violates its schedule invariants (out-of-range
+    (k, m), element/group accounting drift, round-conservation mismatch)
+    — replaying it would desynchronize the parties or the triple budget,
+    so ``Plan.validate()`` refuses it before any protocol round runs."""
+
+
 class UnregisteredModel(FatalError, KeyError):
     """No MPC forward is registered for the model-config type."""
 

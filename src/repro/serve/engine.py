@@ -356,32 +356,35 @@ class InferenceEngine:
         keyed by ``(config, hb, bucketed shape)``, traced on demand via
         ``jax.eval_shape`` (the model is never executed)."""
         key = self._cache_key(shape)
-        if key not in self._plan_cache:
-            if self.model.apply_fn is None:
-                raise errors.ShapeMismatch(
-                    f"request shape {tuple(shape)} has no traced plan and "
-                    "the engine was built without apply_fn — submit only "
-                    f"shape {self.plan.input_shape} or compile with the "
-                    "plaintext forward")
-            bucket = self.policy.bucket_shape(shape)
-            self._plan_cache[key] = trace_plan(
-                self.model.apply_fn, self.model.params, bucket,
-                hb=self.plan.hb, cone=self.plan.cone,
-                name=f"{self.plan.name}@{'x'.join(map(str, bucket))}")
-        return self._plan_cache[key]
+        with self._lock:           # RLock: callers already under it re-enter
+            if key not in self._plan_cache:
+                if self.model.apply_fn is None:
+                    raise errors.ShapeMismatch(
+                        f"request shape {tuple(shape)} has no traced plan "
+                        "and the engine was built without apply_fn — submit "
+                        f"only shape {self.plan.input_shape} or compile "
+                        "with the plaintext forward")
+                bucket = self.policy.bucket_shape(shape)
+                self._plan_cache[key] = trace_plan(
+                    self.model.apply_fn, self.model.params, bucket,
+                    hb=self.plan.hb, cone=self.plan.cone,
+                    name=f"{self.plan.name}@{'x'.join(map(str, bucket))}")
+            return self._plan_cache[key]
 
     @property
     def plan_cache_size(self) -> int:
-        return len(self._plan_cache)
+        with self._lock:
+            return len(self._plan_cache)
 
     # -- tenancy ---------------------------------------------------------------
     def tenant_provider(self, tenant: str) -> beaver.MeteredProvider:
-        if tenant not in self._tenants:
-            self._tenants[tenant] = beaver.MeteredProvider(
-                self._provider_factory(tenant),
-                budget_elements=self._tenant_budgets.get(
-                    tenant, self._default_budget))
-        return self._tenants[tenant]
+        with self._lock:
+            if tenant not in self._tenants:
+                self._tenants[tenant] = beaver.MeteredProvider(
+                    self._provider_factory(tenant),
+                    budget_elements=self._tenant_budgets.get(
+                        tenant, self._default_budget))
+            return self._tenants[tenant]
 
     def tenant_usage(self, tenant: str) -> Dict[str, Optional[int]]:
         p = self.tenant_provider(tenant)
@@ -455,7 +458,8 @@ class InferenceEngine:
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        with self._lock:
+            return len(self._queue)
 
     # -- batching policy evaluation -------------------------------------------
     def _merged_latency(self, requests: Sequence[Request]) -> float:
@@ -708,7 +712,8 @@ class InferenceEngine:
                     if head is not None and age >= max_wait_s:
                         self.flush()
             except Exception as e:          # futures already failed, typed
-                self.last_pump_error = e
+                with self._lock:
+                    self.last_pump_error = e
             self._pump_stop.wait(interval_s)
 
     # -- aggregate stats -------------------------------------------------------

@@ -34,6 +34,7 @@ class LoopConfig:
     log_every: int = 10
     straggler_factor: float = 3.0
     async_ckpt: bool = True
+    seed: int = 0            # init key when the caller passes no key/state
 
 
 @dataclasses.dataclass
@@ -50,7 +51,7 @@ def run(cfg: ArchConfig, pipeline, loop_cfg: LoopConfig,
         key=None, hooks: Optional[Dict[str, Callable]] = None) -> LoopReport:
     optimizer = optimizer or opt_lib.AdamW()
     hooks = hooks or {}
-    key = key if key is not None else jax.random.PRNGKey(0)
+    key = key if key is not None else jax.random.PRNGKey(loop_cfg.seed)
 
     resumed_from = None
     if state is None:
@@ -104,7 +105,6 @@ def elastic_restore(ckpt_dir: str, cfg: ArchConfig, optimizer, mesh,
     """Restore the latest checkpoint onto a (possibly different) mesh."""
     from repro.runtime import sharding as sh
 
-    key = jax.random.PRNGKey(0)
     template = jax.eval_shape(
         lambda k: train_lib.init_state(k, cfg, optimizer),
         jax.ShapeDtypeStruct((2,), jnp.uint32))
