@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
@@ -20,10 +22,52 @@ import jax
 from repro import errors
 from repro.core import beaver, comm as comm_lib, ring
 from repro.core.mpc_tensor import MPCTensor, relu_many
+from repro.runtime import loop as loop_lib
 from .plan import Plan
 from .session import Session
 
 _MPC_FORWARDS: Dict[type, Callable] = {}
+
+# Compiled whole-replay executables, shared across PrivateModel instances:
+# the cache key pins the forward, the plan content (digest), the stream /
+# params / payload signatures and the XLA options, so two models compiled
+# from the same plan reuse one executable (tests and the serving engine
+# construct models freely; XLA compilation is the expensive part).
+_REPLAY_CACHE: Dict = {}
+
+
+@dataclasses.dataclass
+class _ReplayEntry:
+    """One compiled replay: the AOT executable, the trace-time comm whose
+    counters hold the measured round timeline, and the trace/compile cost
+    split (surfaced in BENCH_relu.json by ``benchmarks/run.py --quick``)."""
+
+    exe: Callable
+    comm: "comm_lib.CoalescingComm"
+    trace_s: float
+    compile_s: float
+
+
+def replay_cache_stats() -> List[Dict]:
+    """Snapshot of every compiled replay built in this process: the
+    trace/compile cost split and the fused round count each executable
+    carries.  ``benchmarks/run.py --quick`` reports the sum as the
+    engine's dispatch-overhead breakdown (trace + XLA compile happen once
+    per signature; warm batches pay neither)."""
+    return [{"trace_s": e.trace_s, "compile_s": e.compile_s,
+             "n_rounds": e.comm.n_rounds} for e in _REPLAY_CACHE.values()]
+
+
+def _xla_compiler_options() -> Optional[Dict[str, str]]:
+    """``HB_XLA_OPT=<0-3>`` caps the XLA backend optimization level for
+    the compiled replay (level 0 roughly halves CPU compile time for ~3x
+    slower — still bit-identical — execution; useful when compile
+    latency dominates, e.g. running the test suite on the scan backend).
+    Unset: XLA's default pipeline."""
+    lvl = os.environ.get("HB_XLA_OPT", "")
+    if lvl in ("0", "1", "2", "3"):
+        return {"xla_backend_optimization_level": lvl}
+    return None
 
 
 def register_mpc_forward(cfg_type: type, forward: Callable) -> None:
@@ -118,6 +162,8 @@ class PrivateModel:
     auto_batch: bool = True
     _step_cache: Dict = dataclasses.field(default_factory=dict, repr=False,
                                           compare=False)
+    _layout_cache: Dict = dataclasses.field(default_factory=dict, repr=False,
+                                            compare=False)
 
     # -- convenience ----------------------------------------------------------
     def encrypt(self, key, x_f) -> MPCTensor:
@@ -177,6 +223,11 @@ class PrivateModel:
         cone = self.plan.cone
         if auto_batch is None:
             auto_batch = self.auto_batch
+        if (loop_lib.round_loop_mode() == "scan"
+                and loop_lib.compiled_eligible(comm)):
+            # compiled round loop: the whole replay is ONE jitted program
+            return self._run_streams_compiled(tensors, key_iters, providers,
+                                              comm, params, auto_batch)
 
         def _relu(hs: List[MPCTensor], g: int) -> List[MPCTensor]:
             hb = hb_layers[g]
@@ -198,6 +249,156 @@ class PrivateModel:
             return outs
 
         return self.mpc_forward(params, tensors, self.cfg, _relu, comm)
+
+    # -- compiled round loop --------------------------------------------------
+    def _stream_sig(self, tensors: Sequence[MPCTensor], auto_batch: bool):
+        return (auto_batch,) + tuple(
+            (tuple(t.shape), t.frac_bits) for t in tensors)
+
+    def _relu_layout(self, tensors: Sequence[MPCTensor], auto_batch: bool):
+        """Per-ReLU-call (group, per-stream element counts) of one replay,
+        in call order — recorded from an abstract (``jax.eval_shape``)
+        pass of the forward, so the model is never executed.  This is what
+        lets the compiled path draw every call's keys and triples *before*
+        tracing: the stateful Python providers stay outside the program,
+        in exactly the order the eager loop would have consumed them."""
+        sig = self._stream_sig(tensors, auto_batch)
+        # sig is public metadata (shapes + frac_bits) — not share data
+        if sig not in self._layout_cache:  # hbcheck: disable=R003
+            records: List = []
+
+            def relu_rec(hs, g):
+                records.append((g, tuple(math.prod(h.shape) for h in hs)))
+                return hs
+
+            stub = comm_lib.SimComm()
+            jax.eval_shape(
+                lambda p, ts: self.mpc_forward(p, list(ts), self.cfg,
+                                               relu_rec, stub),
+                self.params, tuple(tensors))
+            self._layout_cache[sig] = tuple(records)
+        return self._layout_cache[sig]
+
+    def _plan_digest(self) -> str:
+        if "digest" not in self._layout_cache:
+            self._layout_cache["digest"] = self.plan.digest()
+        return self._layout_cache["digest"]
+
+    def _compiled_replay(self, sig, auto_batch: bool, params, tensors,
+                         payload) -> _ReplayEntry:
+        """The compiled whole-replay program for one stream signature.
+
+        Keys and Beaver triples enter as program *inputs* (pre-drawn per
+        call), never as baked constants; every ReLU layer runs
+        ``relu_many(loop="scan")`` on a private ``CoalescingComm`` over
+        ``SimComm``, so each fused round is one flipped exchange inside
+        the program and the dense adder levels of solo streams collapse
+        into ``lax.scan`` (carry buffers donated by XLA's loop
+        double-buffering).  The private comm's Python counters fill once,
+        at trace time; the entry keeps that comm so every *execution* can
+        replay the measured timeline onto the caller's comm.
+
+        AOT ``lower``/``compile`` (rather than plain ``jax.jit``) pins the
+        executable to the cache key — everything that could change the
+        trace (plan digest, stream/params/payload signatures, XLA
+        options) is in the key, so one entry always maps to one trace and
+        its counters stay exact — and records the trace-vs-compile cost
+        split that ``benchmarks/run.py --quick`` reports.
+        """
+        opts = _xla_compiler_options()
+        abstract = jax.tree_util.tree_map(
+            lambda l: (jax.numpy.shape(l), jax.numpy.result_type(l).name),
+            (params, payload))
+        key = (self.mpc_forward, self._plan_digest(), sig, auto_batch,
+               jax.tree_util.tree_structure((params, payload)),
+               tuple(jax.tree_util.tree_leaves(abstract)),
+               None if opts is None else tuple(sorted(opts.items())))
+        if key in _REPLAY_CACHE:
+            return _REPLAY_CACHE[key]
+        hb_layers = self.plan.hb.layers
+        cone = self.plan.cone
+        cc = comm_lib.CoalescingComm()
+
+        def replay(params, tensors, payload):
+            calls = iter(payload)
+
+            def _relu(hs, g):
+                keys, tris = next(calls)
+                outs = list(hs)
+                live = [i for i, h in enumerate(hs) if math.prod(h.shape)]
+                if live:
+                    hb = hb_layers[g]
+                    rets = relu_many([keys[i] for i in live],
+                                     [hs[i] for i in live],
+                                     comm=cc, hbs=[hb] * len(live),
+                                     triples_list=[tris[i] for i in live],
+                                     cone=cone, auto_batch=auto_batch,
+                                     loop="scan")
+                    for j, i in enumerate(live):
+                        outs[i] = rets[j]
+                return outs
+
+            return self.mpc_forward(params, list(tensors), self.cfg,
+                                    _relu, cc)
+
+        t0 = time.perf_counter()
+        lowered = jax.jit(replay).lower(params, tensors, payload)
+        t1 = time.perf_counter()
+        exe = (lowered.compile() if opts is None
+               else lowered.compile(compiler_options=opts))
+        t2 = time.perf_counter()
+        entry = _ReplayEntry(exe=exe, comm=cc, trace_s=t1 - t0,
+                             compile_s=t2 - t1)
+        _REPLAY_CACHE[key] = entry
+        return entry
+
+    def _run_streams_compiled(self, tensors: List[MPCTensor], key_iters,
+                              providers, comm, params, auto_batch: bool):
+        """``_run_streams`` on the compiled round-loop backend.
+
+        Same contract, same share-level outputs: stream i draws one key
+        from ``key_iters[i]`` and one provider bundle per ReLU call in
+        call order (so triple metering, pool positions, and retry
+        rollback behave identically to the eager loop), then the cached
+        compiled replay executes the entire online phase in one XLA call.
+        The caller's ``CoalescingComm`` counters advance by the traced
+        round timeline, keeping measured-vs-schedule accounting intact.
+        """
+        layout = self._relu_layout(tensors, auto_batch)
+        hb_layers = self.plan.hb.layers
+        cone = self.plan.cone
+        payload = []
+        for g, ns in layout:
+            hb = hb_layers[g]
+            keys = tuple(next(key_iters[i]) for i in range(len(tensors)))
+            tris = tuple(providers[i].relu_triples(ns[i], hb.width, cone=cone)
+                         for i in range(len(tensors)))
+            payload.append((keys, tris))
+        entry = self._compiled_replay(self._stream_sig(tensors, auto_batch),
+                                      auto_batch, params, tuple(tensors),
+                                      tuple(payload))
+        outs = entry.exe(params, tuple(tensors), tuple(payload))
+        if isinstance(comm, comm_lib.CoalescingComm):
+            comm.replay_counters(entry.comm.n_rounds,
+                                 list(entry.comm.round_bytes),
+                                 list(entry.comm.round_parts))
+        return outs
+
+    def replay_stats(self, tensors: Sequence[MPCTensor],
+                     auto_batch: Optional[bool] = None) -> Optional[Dict]:
+        """Trace/compile cost split of the compiled replay for this stream
+        signature, if one has been built (``benchmarks/run.py --quick``
+        reports it as the dispatch-overhead breakdown)."""
+        if auto_batch is None:
+            auto_batch = self.auto_batch
+        sig = self._stream_sig(list(tensors), auto_batch)
+        for key, entry in _REPLAY_CACHE.items():
+            # sig is public metadata (shapes + frac_bits), not share data
+            if key[0] is self.mpc_forward and key[2] == sig:  # hbcheck: disable=R003
+                return {"trace_s": entry.trace_s,
+                        "compile_s": entry.compile_s,
+                        "n_rounds": entry.comm.n_rounds}
+        return None
 
     # -- mesh serving ---------------------------------------------------------
     def serve_step(self, mesh=None, *, party_axis: str = "party",
@@ -306,7 +507,11 @@ class PrivateModel:
         in ``jax.jit`` so repeated calls reuse the compiled executable
         (jax's own trace cache then keys on the padded batch shape, which
         is why the serving engine buckets request shapes).  The sim path
-        is returned unjitted: its triple providers are stateful Python.
+        is returned unjitted — its triple providers are stateful Python —
+        but on the default ``scan`` round-loop backend (``runtime/loop``)
+        its inner replay runs through the cached compiled program anyway:
+        providers draw outside the program, the online phase is one XLA
+        call.
         """
         cache_key = (mesh, party_axis, data_axis)
         if cache_key not in self._step_cache:

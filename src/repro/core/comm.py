@@ -256,6 +256,37 @@ class CoalescingComm:
         h = self.enqueue(x)
         return self.flush()[h]
 
+    def note_rounds(self, n: int, nbytes: Optional[int] = None,
+                    parts: Optional[int] = None) -> None:
+        """Account ``n`` additional rounds executed inside compiled control
+        flow.  ``lax.scan`` traces its body exactly once, so a scan over L
+        uniform protocol rounds fires ``swap`` once at trace time and the
+        remaining L-1 trips never re-enter Python; the scanned protocol
+        code calls this afterwards so the counters keep matching the
+        schedule simulator round for round.  Defaults replicate the last
+        recorded round (the scanned rounds are uniform by construction).
+        """
+        if n <= 0:
+            return
+        if nbytes is None:
+            nbytes = self.round_bytes[-1] if self.round_bytes else 0
+        if parts is None:
+            parts = self.round_parts[-1] if self.round_parts else 1
+        self.n_rounds += n
+        self.round_bytes.extend([nbytes] * n)
+        self.round_parts.extend([parts] * n)
+
+    def replay_counters(self, n_rounds: int, round_bytes: List[int],
+                        round_parts: List[int]) -> None:
+        """Merge another CoalescingComm's recorded timeline into this one.
+        The compiled replay (``api/compile.py``) traces onto a private
+        comm whose counters fill exactly once at trace time; each
+        *execution* of the cached program replays those counters onto the
+        caller's comm so engine/benchmark accounting is unchanged."""
+        self.n_rounds += n_rounds
+        self.round_bytes.extend(round_bytes)
+        self.round_parts.extend(round_parts)
+
     def party_is(self, p: int, template: jax.Array) -> jax.Array:
         return self.base.party_is(p, template)
 

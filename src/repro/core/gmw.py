@@ -197,6 +197,64 @@ def _adder_msb_rounds(xw, yw, triples: beaver.ReluTriples, comm, w: int,
     return p0[..., w - 1, :] ^ g_map[w - 2]
 
 
+def _shift_planes_dyn(x: jax.Array, d) -> jax.Array:
+    """Plane shift by a *traced* distance: plane i of the result is plane
+    (i - d) of the input, zeros below.  Bit-identical to the static
+    ``kernels.ref._shift_planes`` for every d in [0, w]."""
+    w = x.shape[-2]
+    rolled = jnp.roll(x, d, axis=-2)
+    keep = jnp.arange(w, dtype=jnp.int32)[:, None] >= d
+    return jnp.where(keep, rolled, jnp.uint32(0))
+
+
+def _adder_msb_scan(xw, yw, triples: beaver.ReluTriples, comm, w: int):
+    """Dense Kogge-Stone MSB extraction with the level loop as ONE
+    ``lax.scan`` instead of L unrolled rounds.
+
+    The carry is the (g, p) plane pair — two (P, w, W) uint32 buffers that
+    XLA double-buffers (donates) across trips — and the scanned xs are the
+    per-level shift distances plus ``triples.bin_levels`` (whose leaves
+    already carry the stacked leading L axis).  The exchange stays on the
+    ``Comm`` seam *inside* the body: one ``comm.swap`` of the stacked
+    (d, e) halves per trip, exactly like the generator path, so wire
+    layout and bytes are unchanged.  Level compute reuses the
+    ``kernels.ref`` math with the only twist that the plane shift distance
+    is traced (``_shift_planes_dyn``) rather than static.
+
+    A scan body fires Python-side comm bookkeeping only once (at trace
+    time); ``CoalescingComm.note_rounds`` accounts the remaining L-1
+    uniform rounds so measured counters still equal ``schedule.simulate``.
+    """
+    from repro.kernels import ref as kref
+
+    p0 = xw ^ yw
+    if w == 1:
+        return p0[..., 0, :]
+    L = beaver.n_levels(w)
+    g = and_open(xw, yw, triples.bin_init, comm)
+    sel = _sel_mask(comm, xw)
+    shifts = jnp.left_shift(jnp.int32(1), jnp.arange(L, dtype=jnp.int32))
+
+    def level(carry, xs):
+        g, p = carry
+        d_lvl, tri = xs
+        lhs = jnp.concatenate([p, p], axis=-2)
+        rhs = jnp.concatenate([_shift_planes_dyn(g, d_lvl),
+                               _shift_planes_dyn(p, d_lvl)], axis=-2)
+        d_half = lhs ^ tri.a
+        e_half = rhs ^ tri.b
+        opened = comm.swap(jnp.stack([d_half, e_half], axis=1))  # one round
+        g2, p2 = kref.ks_combine(d_half, opened[:, 0], e_half, opened[:, 1],
+                                 tri.a, tri.b, tri.c, sel, g)
+        return (g2, p2), None
+
+    (g, _p), _ = jax.lax.scan(level, (g, p0), (shifts, triples.bin_levels))
+    note = getattr(comm, "note_rounds", None)
+    if note is not None:
+        note(L - 1)
+    return p0[..., w - 1, :] ^ g[..., w - 2, :]
+
+
 def adder_msb(xw: jax.Array, yw: jax.Array, triples: beaver.ReluTriples,
               comm, w: int, cone: bool = False) -> jax.Array:
     """XOR shares of the MSB of (x + y mod 2^w).
@@ -344,10 +402,48 @@ def relu(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
     return drive(relu_rounds(key, x, triples, comm, k, m, cone), comm)
 
 
+def relu_scan(key, x: ring.Ring64, triples: beaver.ReluTriples, comm,
+              k: int = 64, m: int = 0, cone: bool = False) -> ring.Ring64:
+    """One full ReLU with no Python round loop: the ``scan`` backend of
+    the compiled round engine (``runtime/loop.py``).
+
+    Same protocol, same wire layout, bit-identical shares to
+    ``relu``/``relu_rounds``: prep, the initial AND, B2A and the final
+    Beaver mult are single-round primitives (one ``comm.swap`` each), and
+    the dense Kogge-Stone level segment — the only multi-round stretch —
+    runs as a single ``lax.scan`` (``_adder_msb_scan``).  Under ``jax.jit``
+    the whole call is therefore one XLA program whose round structure
+    matches ``schedule.stream_timeline`` exactly.  The cone-pruned adder
+    keeps its static per-level layout (ragged positions cannot scan) but
+    still traces straight through jit as unrolled rounds.
+    """
+    w = k - m
+    n = x.shape[-1]
+    if w <= 32:
+        v = ring.extract_bits(x, k, m)
+        planes = ring.bitplanes_u32(v, w)
+    else:
+        planes = ring.extract_planes(x, k, m)
+    planes = jnp.moveaxis(planes, 0, 1)
+    packed = shares.pack_bits(planes)
+    x0s, x1s = a2b_prepare(key, packed, comm)                       # 1 round
+    if cone:
+        sign_packed = adder_msb(x0s, x1s, triples, comm, w, cone=True)
+    else:
+        sign_packed = _adder_msb_scan(x0s, x1s, triples, comm, w)
+    sign_bits = shares.unpack_bits(sign_packed, n)
+    s = b2a_bit(sign_bits, triples.b2a, comm)                       # 1 round
+    one = ring.from_int32(jnp.ones((), jnp.int32))
+    p0 = comm.party_is(0, s.lo)
+    d = ring.Ring64(jnp.where(p0, ring.sub(one, s).lo, ring.neg(s).lo),
+                    jnp.where(p0, ring.sub(one, s).hi, ring.neg(s).hi))
+    return beaver_mul(x, d, triples.mult, comm)                     # 1 round
+
+
 def relu_many(keys, xs: Sequence[ring.Ring64],
               triples_list: Sequence[Optional[beaver.ReluTriples]], comm,
               kms: Sequence[Tuple[int, int]], cone: bool = False,
-              auto_batch: bool = True) -> List[ring.Ring64]:
+              auto_batch: bool = True, loop: str = "python") -> List[ring.Ring64]:
     """Round-shared evaluation of N concurrent ReLU groups.
 
     Each group may have its own element count and reduced ring (k, m);
@@ -368,6 +464,14 @@ def relu_many(keys, xs: Sequence[ring.Ring64],
     evaluation.  Ragged groups keep per-payload coalescing.  The timeline
     either way is exactly ``core.schedule.simulate``'s prediction.
 
+    ``loop`` selects the round-loop backend (``runtime/loop.py``): with
+    ``"scan"``, a layer that collapses to a single (possibly merged)
+    stream runs through ``relu_scan`` — dense adder levels as one
+    ``lax.scan`` — instead of the generator driver; heterogeneous sibling
+    streams must advance in lockstep to share rounds, so they stay on the
+    generator path (which still traces straight through ``jax.jit``).
+    Both backends are share-level bit-identical.
+
     Returns per-group Ring64 results in order.
     """
     if not (len(keys) == len(xs) == len(triples_list) == len(kms)):
@@ -386,12 +490,11 @@ def relu_many(keys, xs: Sequence[ring.Ring64],
             continue
         bkey = (n, k, m) if auto_batch else i
         groups.setdefault(bkey, []).append((i, key, x, tr, k, m))
-    streams, placements = [], []
+    stream_args, placements = [], []
     for members in groups.values():
         i0, key0, x0, tr0, k, m = members[0]
         if len(members) == 1:
-            streams.append(relu_rounds(key0, x0, tr0, cc, k=k, m=m,
-                                       cone=cone))
+            stream_args.append((key0, x0, tr0, k, m))
             placements.append([(i0, 0, x0.shape[-1])])
             continue
         n = x0.shape[-1]
@@ -401,10 +504,18 @@ def relu_many(keys, xs: Sequence[ring.Ring64],
         tcat = beaver.concat_relu_triples([e[3] for e in members],
                                           [n] * len(members), k - m,
                                           cone=cone)
-        streams.append(relu_rounds(key0, xcat, tcat, cc, k=k, m=m,
-                                   cone=cone))
+        stream_args.append((key0, xcat, tcat, k, m))
         placements.append([(e[0], j * n, n) for j, e in enumerate(members)])
-    for slices, out in zip(placements, run_streams(cc, streams)):
+    if loop == "scan" and len(stream_args) == 1:
+        # solo (possibly merged) stream: nothing to coalesce across, so the
+        # lockstep generator driver buys nothing — run the scan backend.
+        key0, x0, tr0, k, m = stream_args[0]
+        outs = [relu_scan(key0, x0, tr0, cc, k=k, m=m, cone=cone)]
+    else:
+        outs = run_streams(cc, [relu_rounds(key0, x0, tr0, cc, k=k, m=m,
+                                            cone=cone)
+                                for key0, x0, tr0, k, m in stream_args])
+    for slices, out in zip(placements, outs):
         if len(slices) == 1:
             results[slices[0][0]] = out
         else:

@@ -157,7 +157,8 @@ class MPCTensor:
 def relu_many(keys, tensors: Sequence["MPCTensor"], comm=None,
               hbs: Optional[Sequence[HBLayer]] = None,
               triples_list: Optional[Sequence] = None,
-              cone: bool = False, auto_batch: bool = True) -> list:
+              cone: bool = False, auto_batch: bool = True,
+              loop: str = "python") -> list:
     """Round-shared GMW ReLU over sibling MPCTensors.
 
     All tensors advance through the protocol in lockstep; each round's
@@ -169,7 +170,9 @@ def relu_many(keys, tensors: Sequence["MPCTensor"], comm=None,
     sibling tensors of identical (element count, k, m) are additionally
     merged into one batched protocol stream (see ``gmw.relu_many``) —
     revealed values unchanged, one payload per round instead of N.
-    Identity (width-0) layers and empty tensors pass through.
+    Identity (width-0) layers and empty tensors pass through.  ``loop``
+    selects the round-loop backend (see ``gmw.relu_many`` /
+    ``runtime.loop``); both backends are share-level bit-identical.
     """
     comm = comm or comm_lib.SimComm()
     n_t = len(tensors)
@@ -200,7 +203,7 @@ def relu_many(keys, tensors: Sequence["MPCTensor"], comm=None,
         kms.append((hb.k, hb.m))
         order.append(i)
     rets = gmw.relu_many(run_keys, flats, tris, comm, kms, cone=cone,
-                         auto_batch=auto_batch)
+                         auto_batch=auto_batch, loop=loop)
     for j, i in enumerate(order):
         t = tensors[i]
         data = rets[j].reshape((t.data.shape[0],) + tuple(t.shape))

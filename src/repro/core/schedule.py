@@ -205,6 +205,30 @@ class Schedule:
         wire = 2 * self.bytes_tx * 8 / bandwidth_bps
         return wire + self.n_rounds * rtt_s + compute_s
 
+    def wall_band(self, bandwidth_bps: float, rtt_s: float,
+                  host_s_per_round: float = 1.0,
+                  startup_s: float = 45.0) -> Tuple[float, float]:
+        """Acceptance band ``(lo, hi)`` for a *measured* end-to-end wall
+        over this timeline on a real transport.
+
+        ``lo`` is the schedule-predicted latency — physics; nothing real
+        can beat it.  ``hi`` adds a per-round host budget (Python
+        callback, serialization, socket syscalls — ``host_s_per_round``
+        covers the loopback-measured per-round overhead, ~0.2 s/round on
+        an unloaded box, with slack for a contended CI runner) and a
+        one-off ``startup_s`` (process spawn, jax import, connect/accept
+        handshake, jit warm-up of both parties).  The band therefore
+        *tightens as the schedule shrinks*: a 21-round timeline gets a
+        ~21x smaller host allowance than a 210-round one, so a
+        regression that doubles per-round host work fails ``--check``
+        instead of hiding under a flat multiplier (the old gate's
+        ``20x pred + 120`` ceiling was ~6x the measured wall and caught
+        nothing).
+        """
+        lo = self.latency(bandwidth_bps, rtt_s)
+        hi = lo + self.n_rounds * host_s_per_round + startup_s
+        return (lo, hi)
+
     # -- resilient-transport framing -------------------------------------------
     def framed(self, frame_bytes: int = FRAME_BYTES) -> "Schedule":
         """The same timeline as seen on a resilient transport: every fused

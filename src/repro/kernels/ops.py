@@ -4,6 +4,21 @@ Dispatch policy: on TPU the Pallas path runs compiled; elsewhere (this
 container is CPU) the pure-jnp reference is used unless
 ``REPRO_FORCE_PALLAS_INTERPRET=1`` forces the interpret-mode kernel (tests
 do this explicitly for the allclose sweeps).
+
+Tuning knobs (env, read per call — no code change needed on real
+hardware):
+
+- ``HB_PALLAS_INTERPRET=0`` forces the *non-interpret* Pallas lowering of
+  the GMW round kernels even off-TPU (raises on backends without a Pallas
+  lowering — CPU today — which the kernel parity tests attempt and
+  skip-mark); ``HB_PALLAS_INTERPRET=1`` forces interpret mode, same as
+  the legacy ``REPRO_FORCE_PALLAS_INTERPRET=1``.
+- ``HB_BLOCK_WORDS=<n>`` overrides the word-dim VMEM tile of the fused
+  Kogge-Stone level kernels (multiple of 128; default
+  ``gmw_round.BLOCK_WORDS``) — the v5e/v6e BLOCK_WORDS sweep is a config
+  sweep, not an edit.  Both knobs enter the jit'd wrappers as static
+  arguments, so flipping them mid-process retraces instead of hitting a
+  stale cache.
 """
 from __future__ import annotations
 
@@ -25,11 +40,32 @@ _U32 = jnp.uint32
 def _use_pallas() -> bool:
     if os.environ.get("REPRO_FORCE_PALLAS_INTERPRET") == "1":
         return True
+    if os.environ.get("HB_PALLAS_INTERPRET") in ("0", "1"):
+        return True
     return jax.default_backend() == "tpu"
 
 
 def _interpret() -> bool:
+    forced = os.environ.get("HB_PALLAS_INTERPRET")
+    if forced == "0":
+        return False
+    if forced == "1":
+        return True
     return jax.default_backend() != "tpu"
+
+
+def block_words() -> int:
+    """The word-dim tile of the fused GMW round kernels: the
+    ``HB_BLOCK_WORDS`` override when set and valid (positive multiple of
+    128 — the TPU lane count), else ``gmw_round.BLOCK_WORDS``."""
+    raw = os.environ.get("HB_BLOCK_WORDS", "")
+    try:
+        n = int(raw)
+    except ValueError:
+        return _gmw_round.BLOCK_WORDS
+    if n > 0 and n % 128 == 0:
+        return n
+    return _gmw_round.BLOCK_WORDS
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
@@ -68,46 +104,62 @@ def unpack(words: jax.Array, w: int, n_elements: int) -> jax.Array:
     return out[:n_elements]
 
 
-@jax.jit
-def beaver_and(d_open, e_open, a, b, c, sel):
-    """Fused local Beaver-AND evaluation on packed (planes, W) words."""
+@functools.partial(jax.jit, static_argnums=(6, 7))
+def _beaver_and_jit(d_open, e_open, a, b, c, sel, interpret, bw):
     if _use_pallas():
-        blk = _gmw_round.BLOCK
+        blk = (_gmw_round.BLOCK[0], bw)
         args = [d_open, e_open, a, b, c, jnp.broadcast_to(sel, d_open.shape)]
         padded = [_pad_to(_pad_to(x, 0, blk[0]), 1, blk[1]) for x in args]
-        out = _gmw_round.beaver_and_pallas(*padded, interpret=_interpret())
+        out = _gmw_round.beaver_and_pallas(*padded, interpret=interpret,
+                                           block=blk)
         return out[: d_open.shape[0], : d_open.shape[1]]
     return ref.beaver_and(d_open, e_open, a, b, c, sel)
 
 
-@functools.partial(jax.jit, static_argnums=(4,))
-def ks_mask(g, p, a, b, shift: int):
-    """Fused pre-exchange Kogge-Stone level: plane-shift + lhs/rhs assembly
-    + Beaver triple masking in one pass.  Returns the (d, e) wire halves."""
+def beaver_and(d_open, e_open, a, b, c, sel):
+    """Fused local Beaver-AND evaluation on packed (planes, W) words."""
+    return _beaver_and_jit(d_open, e_open, a, b, c, sel, _interpret(),
+                           block_words())
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5, 6))
+def _ks_mask_jit(g, p, a, b, shift, interpret, block):
     if _use_pallas():
         words = g.shape[-1]
-        bw = min(_gmw_round.BLOCK_WORDS, words + (-words) % 128)
+        bw = min(block, words + (-words) % 128)
         args = [_pad_to(x, 2, bw) for x in (g, p, a, b)]
-        d, e = _gmw_round.ks_mask_pallas(*args, shift, interpret=_interpret(),
+        d, e = _gmw_round.ks_mask_pallas(*args, shift, interpret=interpret,
                                          block_words=bw)
         return d[..., :words], e[..., :words]
     return ref.ks_mask(g, p, a, b, shift)
 
 
-@jax.jit
-def ks_combine(d, d_other, e, e_other, a, b, c, sel, g):
-    """Fused post-exchange Kogge-Stone level: opening XOR + Beaver local
-    evaluation + g/p level combine in one pass.  Returns (g', p')."""
+def ks_mask(g, p, a, b, shift: int):
+    """Fused pre-exchange Kogge-Stone level: plane-shift + lhs/rhs assembly
+    + Beaver triple masking in one pass.  Returns the (d, e) wire halves."""
+    return _ks_mask_jit(g, p, a, b, shift, _interpret(), block_words())
+
+
+@functools.partial(jax.jit, static_argnums=(9, 10))
+def _ks_combine_jit(d, d_other, e, e_other, a, b, c, sel, g, interpret,
+                    block):
     if _use_pallas():
         words = g.shape[-1]
-        bw = min(_gmw_round.BLOCK_WORDS, words + (-words) % 128)
+        bw = min(block, words + (-words) % 128)
         sel_b = jnp.broadcast_to(sel, d.shape)
         args = [_pad_to(x, 2, bw)
                 for x in (d, d_other, e, e_other, a, b, c, sel_b, g)]
-        g2, p2 = _gmw_round.ks_combine_pallas(*args, interpret=_interpret(),
+        g2, p2 = _gmw_round.ks_combine_pallas(*args, interpret=interpret,
                                               block_words=bw)
         return g2[..., :words], p2[..., :words]
     return ref.ks_combine(d, d_other, e, e_other, a, b, c, sel, g)
+
+
+def ks_combine(d, d_other, e, e_other, a, b, c, sel, g):
+    """Fused post-exchange Kogge-Stone level: opening XOR + Beaver local
+    evaluation + g/p level combine in one pass.  Returns (g', p')."""
+    return _ks_combine_jit(d, d_other, e, e_other, a, b, c, sel, g,
+                           _interpret(), block_words())
 
 
 @functools.partial(jax.jit, static_argnums=())

@@ -1,0 +1,59 @@
+"""Round-loop backend selection: compiled (`scan`) vs generator (`python`).
+
+The protocol primitives in ``core/gmw.py`` are round generators driven by a
+Python loop — one interpreter round-trip (and one device dispatch) per
+protocol round.  That loop is the reference backend.  The compiled backend
+lowers an entire plan replay into ONE jitted XLA program: the round
+timeline is static (``core/schedule.py`` predicts it exactly), so the
+generators trace straight through ``jax.jit`` and the dense Kogge-Stone
+level segment of a solo stream additionally collapses into a genuine
+``lax.scan`` over the stacked per-level triples (``gmw._adder_msb_scan``).
+
+Backend choice:
+
+- ``HB_ROUND_LOOP=scan``  (default): compiled fast path wherever the comm
+  backend is compatible (see ``compiled_eligible``), generator loop
+  elsewhere.
+- ``HB_ROUND_LOOP=python``: generator loop everywhere — the reference
+  backend CI runs the tier-1 suite against in addition to the default.
+
+Eligibility: the compiled path bakes the exchange into the program, so the
+comm stack must be pure compute with no per-round Python side effects —
+exactly ``SimComm`` (local flip) or ``CoalescingComm`` directly over
+``SimComm`` (its Python counters fill once at trace time and are
+replayed onto the caller's comm by ``api/compile.py``).  Everything else —
+``CountingComm``, ``ResilientComm``, ``JournaledComm``,
+``FaultInjectingComm``, ``transport.SocketComm`` — needs to observe every
+round from Python, and ``MeshComm`` already runs compiled inside
+``shard_map`` (one ppermute per fused round; the HLO collective census is
+the contract there), so all of those stay on the generator loop.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core import comm as comm_lib
+
+_VALID = ("scan", "python")
+
+
+def round_loop_mode() -> str:
+    """The selected round-loop backend: ``"scan"`` (compiled, default) or
+    ``"python"`` (generator reference).  Unknown values fall back to the
+    default rather than erroring so a typo'd env var cannot take down a
+    serving process."""
+    mode = os.environ.get("HB_ROUND_LOOP", "scan")
+    return mode if mode in _VALID else "scan"
+
+
+def compiled_eligible(comm) -> bool:
+    """True iff the whole replay may run inside one jitted program on this
+    comm backend: exactly SimComm, or CoalescingComm directly over SimComm.
+    Subclasses do NOT qualify — a wrapper that adds per-round Python
+    behaviour (counters, framing, journaling, sockets) must see every
+    round, which the compiled loop by construction does not re-enter
+    Python for."""
+    if type(comm) is comm_lib.SimComm:
+        return True
+    return (type(comm) is comm_lib.CoalescingComm
+            and type(comm.base) is comm_lib.SimComm)

@@ -4,6 +4,15 @@ import sys
 # tests see the default single CPU device (the dry-run alone forces 512)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# The suite defaults to the generator round-loop backend: compiling one
+# whole-replay XLA program per (model, shape) signature is the production
+# trade (compile once, serve thousands) but would dominate a test suite
+# that builds hundreds of tiny models.  CI additionally runs the suite
+# with HB_ROUND_LOOP=scan (and HB_XLA_OPT=0 to cap compile time) so the
+# compiled backend can never silently regress; tests/test_compiled_loop.py
+# pins scan-vs-python bit-identity regardless of this default.
+os.environ.setdefault("HB_ROUND_LOOP", "python")
+
 import jax
 import pytest
 

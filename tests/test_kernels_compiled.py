@@ -1,0 +1,164 @@
+"""Non-interpret Pallas parity + the BLOCK_WORDS sweep hook (PR 9).
+
+The fused GMW round kernels must be bit-identical to the ``kernels/ref``
+jnp oracle under the *compiled* (``interpret=False``) Pallas lowering and
+at every legal ``block_words`` tile.  On backends without a compiled
+Pallas lowering (CPU today: "Only interpret mode is supported on CPU
+backend") the non-interpret cases attempt the call and skip-mark — on a
+TPU runner they execute for real with no code change.  The ops-layer
+tests pin the env knobs (``HB_BLOCK_WORDS`` / ``HB_PALLAS_INTERPRET``)
+that turn the sweep into pure configuration, including that flipping a
+knob mid-process retraces instead of reusing a stale jit cache.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import gmw_round, ops, ref
+
+#: the v5e/v6e tuning sweep: word-dim tiles, all multiples of the 128
+#: TPU lane count (256 is the shipped default)
+BLOCK_WORDS_SWEEP = [128, 256, 512]
+
+
+@pytest.fixture(params=BLOCK_WORDS_SWEEP)
+def block_words(request):
+    return request.param
+
+
+def _attempt_noninterpret(fn, *args, **kw):
+    """Run a kernel with ``interpret=False``; skip-mark where the backend
+    has no compiled Pallas lowering (exact behaviour the ISSUE asks for:
+    attempt, don't guess from the platform string)."""
+    try:
+        return fn(*args, interpret=False, **kw)
+    except Exception as e:  # jaxlib raises backend-specific error types
+        msg = str(e)
+        if "interpret mode" in msg or "Only interpret" in msg.lower():
+            pytest.skip(f"no compiled Pallas lowering on "
+                        f"{jax.default_backend()}: {msg.splitlines()[0]}")
+        raise
+
+
+def _mk(rng, shape):
+    return jnp.asarray(
+        rng.integers(0, 2**32, shape, dtype=np.uint64).astype(np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Direct kernel parity, interpret=False
+# ---------------------------------------------------------------------------
+
+def test_beaver_and_noninterpret_matches_ref(rng):
+    d, e, a, b, c = (_mk(rng, (8, 256)) for _ in range(5))
+    sel = jnp.broadcast_to(jnp.uint32(0xFFFFFFFF), d.shape)
+    got = _attempt_noninterpret(gmw_round.beaver_and_pallas,
+                                d, e, a, b, c, sel)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.beaver_and(d, e, a, b, c, sel)))
+
+
+@pytest.mark.parametrize("w,shift", [(8, 1), (8, 4), (64, 32)])
+def test_ks_mask_noninterpret_matches_ref(w, shift, rng, block_words):
+    g, p = _mk(rng, (2, w, block_words)), _mk(rng, (2, w, block_words))
+    a, b = _mk(rng, (2, 2 * w, block_words)), _mk(rng, (2, 2 * w, block_words))
+    d_k, e_k = _attempt_noninterpret(gmw_round.ks_mask_pallas,
+                                     g, p, a, b, shift,
+                                     block_words=block_words)
+    d_r, e_r = ref.ks_mask(g, p, a, b, shift)
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    np.testing.assert_array_equal(np.asarray(e_k), np.asarray(e_r))
+
+
+@pytest.mark.parametrize("w", [8, 64])
+def test_ks_combine_noninterpret_matches_ref(w, rng, block_words):
+    d, do, e, eo, a, b, c = (_mk(rng, (2, 2 * w, block_words))
+                             for _ in range(7))
+    g = _mk(rng, (2, w, block_words))
+    sel = jnp.broadcast_to(jnp.uint32(0xFFFFFFFF), d.shape)
+    g_k, p_k = _attempt_noninterpret(gmw_round.ks_combine_pallas,
+                                     d, do, e, eo, a, b, c, sel, g,
+                                     block_words=block_words)
+    g_r, p_r = ref.ks_combine(d, do, e, eo, a, b, c, sel, g)
+    np.testing.assert_array_equal(np.asarray(g_k), np.asarray(g_r))
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+
+
+# ---------------------------------------------------------------------------
+# BLOCK_WORDS sweep under interpret mode: every tile in the sweep is
+# bit-identical on any backend, so a TPU sweep only changes wall-clock
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w,shift", [(8, 2), (21 - 13, 1)])
+def test_ks_mask_block_words_sweep_interpret(w, shift, rng, block_words):
+    words = 512                              # covered by every sweep tile
+    g, p = _mk(rng, (2, w, words)), _mk(rng, (2, w, words))
+    a, b = _mk(rng, (2, 2 * w, words)), _mk(rng, (2, 2 * w, words))
+    d_k, e_k = gmw_round.ks_mask_pallas(g, p, a, b, shift, interpret=True,
+                                        block_words=block_words)
+    d_r, e_r = ref.ks_mask(g, p, a, b, shift)
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    np.testing.assert_array_equal(np.asarray(e_k), np.asarray(e_r))
+
+
+# ---------------------------------------------------------------------------
+# ops-layer env knobs
+# ---------------------------------------------------------------------------
+
+def test_block_words_env_knob(monkeypatch):
+    monkeypatch.delenv("HB_BLOCK_WORDS", raising=False)
+    assert ops.block_words() == gmw_round.BLOCK_WORDS
+    monkeypatch.setenv("HB_BLOCK_WORDS", "512")
+    assert ops.block_words() == 512
+    for bad in ("300", "-128", "0", "abc"):   # not a positive 128-multiple
+        monkeypatch.setenv("HB_BLOCK_WORDS", bad)
+        assert ops.block_words() == gmw_round.BLOCK_WORDS
+
+
+def test_ops_knob_flip_retraces_not_stale(monkeypatch, rng):
+    """ref path, then HB_PALLAS_INTERPRET=1, then a BLOCK_WORDS override:
+    three traces of the same public wrapper in one process, all
+    bit-identical — the knobs are static jit args, not baked-in globals."""
+    monkeypatch.delenv("REPRO_FORCE_PALLAS_INTERPRET", raising=False)
+    monkeypatch.delenv("HB_PALLAS_INTERPRET", raising=False)
+    monkeypatch.delenv("HB_BLOCK_WORDS", raising=False)
+    w, words, shift = 8, 256, 2
+    g, p = _mk(rng, (2, w, words)), _mk(rng, (2, w, words))
+    a, b = _mk(rng, (2, 2 * w, words)), _mk(rng, (2, 2 * w, words))
+    want = [np.asarray(x) for x in ref.ks_mask(g, p, a, b, shift)]
+
+    if jax.default_backend() != "tpu":       # ref dispatch off-TPU
+        got = ops.ks_mask(g, p, a, b, shift)
+        for gx, wx in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(gx), wx)
+
+    monkeypatch.setenv("HB_PALLAS_INTERPRET", "1")   # interpret Pallas path
+    got = ops.ks_mask(g, p, a, b, shift)
+    for gx, wx in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(gx), wx)
+
+    monkeypatch.setenv("HB_BLOCK_WORDS", "128")      # sweep tile override
+    got = ops.ks_mask(g, p, a, b, shift)
+    for gx, wx in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(gx), wx)
+
+
+def test_ops_noninterpret_knob(monkeypatch, rng):
+    """HB_PALLAS_INTERPRET=0 forces the compiled Pallas lowering through
+    the public ops wrappers (skip-marked where the backend lacks one)."""
+    monkeypatch.setenv("HB_PALLAS_INTERPRET", "0")
+    w, words = 8, 256
+    g, p = _mk(rng, (2, w, words)), _mk(rng, (2, w, words))
+    a, b = _mk(rng, (2, 2 * w, words)), _mk(rng, (2, 2 * w, words))
+    try:
+        got = ops.ks_mask(g, p, a, b, 2)
+    except Exception as e:
+        msg = str(e)
+        if "interpret mode" in msg or "Only interpret" in msg.lower():
+            pytest.skip(f"no compiled Pallas lowering on "
+                        f"{jax.default_backend()}")
+        raise
+    d_r, e_r = ref.ks_mask(g, p, a, b, 2)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(d_r))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(e_r))
