@@ -272,6 +272,56 @@ def quick(out_path: str = "BENCH_relu.json") -> dict:
         "replay_signatures": len(replay_entries),
     }
 
+    # private LM (reduced-ring transformer): one qwen smoke block through
+    # the registered MPC forward — PWL SiLU, ReLU attention, three Beaver
+    # opens per layer.  Measured fused rounds/bytes must EQUAL the plan's
+    # schedule prediction (--check gates the equality), alongside the
+    # per-token sim latency and the LAN/WAN projections.
+    import dataclasses
+
+    from repro import configs as configs_lib
+    from repro.models import lm as lm_lib
+
+    lm_cfg = dataclasses.replace(configs_lib.get("qwen1.5-0.5b-smoke"),
+                                 n_layers=1)
+    lm_params = lm_lib.init(jax.random.PRNGKey(0), lm_cfg)
+    lm_seq = 8
+    lm_h = jax.random.normal(jax.random.PRNGKey(1),
+                             (1, lm_seq, lm_cfg.d_model)) * 0.5
+    lm_plan = lm_lib.trace(lm_params, lm_cfg, 1, lm_seq)
+    lm_cc = comm_lib.CoalescingComm(comm_lib.CountingComm())
+    lm_model = api.compile(
+        lambda p, v, relu_fn=None: lm_lib.mpc_reference(p, v, lm_cfg,
+                                                        relu_fn=relu_fn),
+        lm_params, lm_cfg, lm_plan, api.Session(key=0, comm=lm_cc))
+    Xh = lm_model.encrypt(jax.random.PRNGKey(2), lm_h)
+
+    def serve_lm():
+        t0 = time.perf_counter()
+        out = lm_model(Xh, key=jax.random.PRNGKey(3))
+        jax.block_until_ready((out.data.lo, out.data.hi))
+        return out, time.perf_counter() - t0
+
+    lm_out, lm_wall = serve_lm()
+    lm_ref = np.asarray(lm_lib.mpc_reference(lm_params, lm_h, lm_cfg))
+    lm_err = float(np.max(np.abs(lm_out.reveal_np() - lm_ref)))
+    lm_sched = lm_plan.schedule()
+    results["lm"] = {
+        "arch": lm_cfg.name, "n_layers": lm_cfg.n_layers, "seq": lm_seq,
+        "n_relu_calls": len(lm_plan.calls), "n_opens": len(lm_plan.opens),
+        "fused_rounds": lm_cc.n_rounds,
+        "bytes_fused": lm_cc.bytes_tx,
+        "sched_rounds_pred": lm_sched.n_rounds,
+        "sched_bytes_pred": lm_sched.bytes_tx,
+        "max_abs_err_vs_plaintext": round(lm_err, 6),
+        "wall_s": round(lm_wall, 4),
+        "s_per_token": round(lm_wall / lm_seq, 4),
+        "sched_latency_lan_ms_pred": round(
+            lm_sched.latency(LAN.bandwidth_bps, LAN.rtt_s) * 1e3, 3),
+        "sched_latency_wan_s_pred": round(
+            lm_sched.latency(WAN.bandwidth_bps, WAN.rtt_s), 4),
+    }
+
     # protocol-safety counters (the hbcheck gate): non-baselined AST-lint
     # + lock-discipline findings over src/tests, and the canonical ResNet
     # serve_step leakage census — zero collectives may carry an unmasked
@@ -706,6 +756,29 @@ def check(path: str = "BENCH_relu.json") -> int:
             failures.append(
                 f"multigroup: mesh-lowered collective bytes {mesh_bytes} "
                 f"!= schedule-predicted {mg.get('sched_bytes_pred')}")
+    # private-LM gate (present once --quick ran): the transformer block's
+    # measured fused rounds AND bytes must EQUAL the plan's schedule
+    # prediction — Beaver opens included, equality not a bound — and the
+    # forward must stay within fixed-point tolerance of the plaintext
+    # reference
+    lm_entry = data.get("lm")
+    if lm_entry is not None:
+        for meas_key, pred_key, unit in (
+                ("fused_rounds", "sched_rounds_pred", "rounds"),
+                ("bytes_fused", "sched_bytes_pred", "bytes")):
+            meas, pred = lm_entry.get(meas_key), lm_entry.get(pred_key)
+            if meas is None or pred is None:
+                failures.append(f"lm: missing {meas_key!r}/{pred_key!r} — "
+                                f"stale BENCH file? regenerate with --quick")
+            elif meas != pred:
+                failures.append(
+                    f"lm: measured {meas} {unit} != schedule-predicted "
+                    f"{pred} — the LM replay and its plan diverged")
+        lm_err = lm_entry.get("max_abs_err_vs_plaintext")
+        if lm_err is None or lm_err > 0.05:
+            failures.append(
+                f"lm: max |MPC - plaintext| = {lm_err} exceeds the "
+                f"fixed-point tolerance 0.05")
     # hbcheck gate (present once --quick ran with the analysis suite):
     # zero non-baselined protocol-safety findings and zero unmasked-secret
     # collectives in the canonical serve_step lowering
@@ -797,6 +870,12 @@ def check(path: str = "BENCH_relu.json") -> int:
           + (f"; mesh HLO census {mesh_rounds} collective-permutes / "
              f"{mesh_bytes} B == schedule" if mesh_rounds is not None
              else " (no mesh census: single device)"))
+    if lm_entry is not None:
+        print(f"lm gate OK: {lm_entry.get('fused_rounds')} fused rounds / "
+              f"{lm_entry.get('bytes_fused')} B == schedule (opens "
+              f"included), max err "
+              f"{lm_entry.get('max_abs_err_vs_plaintext')} vs plaintext, "
+              f"{lm_entry.get('s_per_token')} s/token (sim)")
     if hb is not None:
         print(f"hbcheck gate OK: {hb.get('hbcheck_findings')} findings, "
               f"{hb.get('unmasked_collectives')} unmasked collectives "

@@ -441,6 +441,10 @@ R006_ROUND_PATH = frozenset({
     "core/gmw.py", "core/gmw_ref.py", "core/schedule.py", "core/comm.py",
     "core/faults.py", "core/beaver.py", "core/costmodel.py",
     "transport/socket.py", "transport/engine_link.py",
+    # the reduced-ring nonlinearity subsystem drives relu_fn / Beaver-open
+    # placement, so its evaluation order feeds the schedule directly
+    "nn/approx/__init__.py", "nn/approx/pwl.py", "nn/approx/attention.py",
+    "nn/approx/bounds.py",
 })
 
 

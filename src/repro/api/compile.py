@@ -21,7 +21,7 @@ import jax
 
 from repro import errors
 from repro.core import beaver, comm as comm_lib, ring
-from repro.core.mpc_tensor import MPCTensor, relu_many
+from repro.core.mpc_tensor import MPCTensor, products_many, relu_many
 from repro.runtime import loop as loop_lib
 from .plan import Plan
 from .session import Session
@@ -224,8 +224,12 @@ class PrivateModel:
         if auto_batch is None:
             auto_batch = self.auto_batch
         if (loop_lib.round_loop_mode() == "scan"
-                and loop_lib.compiled_eligible(comm)):
-            # compiled round loop: the whole replay is ONE jitted program
+                and loop_lib.compiled_eligible(comm)
+                and not getattr(self.plan, "opens", ())):
+            # compiled round loop: the whole replay is ONE jitted program.
+            # Plans with secret-product opens (LM attention/gating) stay on
+            # the eager loop: their key draws interleave ReLU calls with
+            # per-open draws, an order the pre-drawn payload can't express.
             return self._run_streams_compiled(tensors, key_iters, providers,
                                               comm, params, auto_batch)
 
@@ -247,6 +251,18 @@ class PrivateModel:
                 for j, i in enumerate(live):
                     outs[i] = rets[j]
             return outs
+
+        # Secret-product hooks (see Plan.opens): stream i draws ONE key per
+        # product site — independent of how many sibling streams run — and
+        # derives its Beaver triple inline from it, so batched execution
+        # stays share-level bit-identical to serial per-request execution.
+        # All sibling opens coalesce into one protocol round.
+        def _products(kind, xs, ys):
+            keys = [next(key_iters[i]) for i in range(len(xs))]
+            return products_many([kind] * len(xs), keys, xs, ys, comm=comm)
+
+        _relu.matmul = lambda xs, ys: _products("matmul", xs, ys)
+        _relu.mul = lambda xs, ys: _products("mul", xs, ys)
 
         return self.mpc_forward(params, tensors, self.cfg, _relu, comm)
 

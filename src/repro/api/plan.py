@@ -70,6 +70,28 @@ class ReluCall:
 
 
 @dataclasses.dataclass(frozen=True)
+class OpenCall:
+    """One Beaver-product opening site (secret-by-secret mul/matmul in the
+    transformer path): how many ring elements the single "open" exchange
+    carries (per party, one direction — 2n for an elementwise mul of n,
+    ``size(X) + size(Y)`` for a matmul), and where it sits in program
+    order (``at_call`` = number of ReLU calls preceding it)."""
+
+    n_elements: int
+    at_call: int
+    label: str = ""
+
+    def to_json(self) -> Dict:
+        return {"n_elements": self.n_elements, "at_call": self.at_call,
+                "label": self.label}
+
+    @staticmethod
+    def from_json(d: Dict) -> "OpenCall":
+        return OpenCall(int(d["n_elements"]), int(d["at_call"]),
+                        str(d.get("label", "")))
+
+
+@dataclasses.dataclass(frozen=True)
 class Plan:
     """Network plan: ReLU call trace + per-group HummingBird assignment.
 
@@ -92,6 +114,7 @@ class Plan:
     input_shape: Tuple[int, ...] = ()
     cone: bool = False
     name: str = ""
+    opens: Tuple[OpenCall, ...] = ()
 
     # -- derived views --------------------------------------------------------
     @property
@@ -128,6 +151,12 @@ class Plan:
                           (c.n_elements, layer.k, layer.m)))
         return tuple(specs)
 
+    def open_specs(self) -> Tuple[int, ...]:
+        """Ring elements opened per Beaver-product site, in program order
+        — one ``core.schedule.simulate_open`` spec per site.  Empty for
+        plans without secret-by-secret products (e.g. ResNet)."""
+        return tuple(o.n_elements for o in self.opens)
+
     # -- analytics ------------------------------------------------------------
     def schedule(self, streams: int = 1,
                  auto_batch: bool = True) -> schedule_lib.Schedule:
@@ -150,10 +179,19 @@ class Plan:
                 "cost/estimate need a traced plan: this plan was built "
                 "without a call list (Plan.from_hb) — use trace_plan / "
                 "model-specific trace() to get one")
+        opens_at: Dict[int, List[OpenCall]] = {}
+        for o in self.opens:
+            opens_at.setdefault(o.at_call, []).append(o)
         total = schedule_lib.Schedule.empty()
-        for spec in self.call_specs():
+        for j, spec in enumerate(self.call_specs()):
+            for o in opens_at.get(j, ()):
+                total = total + schedule_lib.simulate_open(
+                    [o.n_elements] * streams)
             total = total + schedule_lib.simulate(
                 [spec] * streams, cone=self.cone, auto_batch=auto_batch)
+        for o in opens_at.get(len(self.calls), ()):
+            total = total + schedule_lib.simulate_open(
+                [o.n_elements] * streams)
         return total
 
     def gantt(self, streams: int = 1, auto_batch: bool = True) -> str:
@@ -227,16 +265,23 @@ class Plan:
 
     # -- (de)serialization ----------------------------------------------------
     def to_json(self) -> Dict:
-        return {"name": self.name, "input_shape": list(self.input_shape),
-                "cone": self.cone, "hb": self.hb.to_json(),
-                "calls": [c.to_json() for c in self.calls]}
+        d = {"name": self.name, "input_shape": list(self.input_shape),
+             "cone": self.cone, "hb": self.hb.to_json(),
+             "calls": [c.to_json() for c in self.calls]}
+        if self.opens:
+            # only plans with secret-by-secret products carry the key, so
+            # pre-existing (ResNet) plan digests are byte-identical
+            d["opens"] = [o.to_json() for o in self.opens]
+        return d
 
     @staticmethod
     def from_json(d: Dict) -> "Plan":
         return Plan(calls=tuple(ReluCall.from_json(c) for c in d["calls"]),
                     hb=HBConfig.from_json(d["hb"]),
                     input_shape=tuple(int(s) for s in d["input_shape"]),
-                    cone=bool(d["cone"]), name=str(d.get("name", "")))
+                    cone=bool(d["cone"]), name=str(d.get("name", "")),
+                    opens=tuple(OpenCall.from_json(o)
+                                for o in d.get("opens", [])))
 
     def validate(self) -> "Plan":
         """Static pre-flight of a loaded/JSON plan: every schedule
@@ -296,6 +341,16 @@ class Plan:
                     f"expected ({c.n_elements}, "
                     f"{hb.layers[c.group].width}) — gen_plan_triples "
                     f"would produce the wrong pool")
+        for i, o in enumerate(self.opens):
+            if o.n_elements < 0:
+                raise errors.PlanInvalid(
+                    f"plan {self.name!r}: open {i} claims {o.n_elements} "
+                    f"elements")
+            if not 0 <= o.at_call <= len(self.calls):
+                raise errors.PlanInvalid(
+                    f"plan {self.name!r}: open {i} sits at call position "
+                    f"{o.at_call} but the plan has {len(self.calls)} ReLU "
+                    f"calls")
         if self.calls:
             total = self.schedule()
             rounds = bytes_tx = 0
@@ -303,6 +358,10 @@ class Plan:
                 per_call = schedule_lib.simulate([spec], cone=self.cone)
                 rounds += per_call.n_rounds
                 bytes_tx += per_call.bytes_tx
+            for n in self.open_specs():
+                per_open = schedule_lib.simulate_open([n])
+                rounds += per_open.n_rounds
+                bytes_tx += per_open.bytes_tx
             if (total.n_rounds, total.bytes_tx) != (rounds, bytes_tx):
                 raise errors.PlanInvalid(
                     f"plan {self.name!r}: composed schedule "
@@ -363,11 +422,28 @@ def trace_plan(apply_fn, params, x, *, hb: Optional[HBConfig] = None,
     if isinstance(x, (tuple, list)):
         x = jax.ShapeDtypeStruct(tuple(x), jnp.float32)
     calls: List[ReluCall] = []
+    opens: List[OpenCall] = []
 
     def tracing_relu(v, g):
         calls.append(ReluCall(int(v.size), int(g),
                               tuple(int(s) for s in v.shape)))
         return v
+
+    # Secret-product hooks: models that multiply two *secret* operands call
+    # ``relu_fn.matmul`` / ``relu_fn.mul`` so the trace records the Beaver
+    # open (one round, (e, f) payload) at its position in the call order.
+    def tracing_matmul(a, b):
+        opens.append(OpenCall(int(a.size + b.size), at_call=len(calls),
+                              label="matmul"))
+        return jnp.matmul(a, b)
+
+    def tracing_mul(a, b):
+        opens.append(OpenCall(int(2 * a.size), at_call=len(calls),
+                              label="mul"))
+        return a * b
+
+    tracing_relu.matmul = tracing_matmul
+    tracing_relu.mul = tracing_mul
 
     jax.eval_shape(lambda p, xx: apply_fn(p, xx, relu_fn=tracing_relu),
                    params, x)
@@ -386,4 +462,4 @@ def trace_plan(apply_fn, params, x, *, hb: Optional[HBConfig] = None,
         assert hb.n_groups == n, (hb.n_groups, n)
         hb = HBConfig(hb.layers, tuple(elements))
     return Plan(calls=tuple(calls), hb=hb, input_shape=tuple(x.shape),
-                cone=cone, name=name)
+                cone=cone, name=name, opens=tuple(opens))

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro import errors
 
-from . import ring, schedule as schedule_lib, shares
+from . import ring, ring_linalg, schedule as schedule_lib, shares
 from .schedule import n_levels  # noqa: F401  (canonical home: core.schedule)
 
 _U32 = jnp.uint32
@@ -61,6 +61,22 @@ def gen_arith(key, shape, n_parties: int = 2) -> ArithTriple:
     a = ring.uniform(ka, shape)
     b = ring.uniform(kb, shape)
     c = ring.mul(a, b)
+    return ArithTriple(
+        shares.share(ksa, a, n_parties),
+        shares.share(ksb, b, n_parties),
+        shares.share(ksc, c, n_parties),
+    )
+
+
+def gen_matmul(key, x_shape, y_shape, n_parties: int = 2) -> ArithTriple:
+    """Matrix Beaver triple (A, B, C = A @ B mod 2^64) for a secret-by-
+    secret matmul of operand shapes ``x_shape @ y_shape`` (batch dims
+    aligned, contraction on the trailing pair).  Consumed by
+    ``gmw.beaver_matmul`` / ``gmw.products_many``."""
+    ka, kb, ksa, ksb, ksc = jax.random.split(key, 5)
+    a = ring.uniform(ka, tuple(x_shape))
+    b = ring.uniform(kb, tuple(y_shape))
+    c = ring_linalg.matmul_ring(a, b)
     return ArithTriple(
         shares.share(ksa, a, n_parties),
         shares.share(ksb, b, n_parties),

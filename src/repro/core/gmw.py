@@ -46,7 +46,8 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import beaver, comm as comm_lib, ring, schedule as schedule_lib, shares
+from . import beaver, comm as comm_lib, ring, ring_linalg, \
+    schedule as schedule_lib, shares
 from .schedule import cone_sets  # noqa: F401  (canonical home: core.schedule)
 
 _U32 = jnp.uint32
@@ -320,6 +321,70 @@ def _beaver_mul_rounds(x: ring.Ring64, y: ring.Ring64,
 def beaver_mul(x: ring.Ring64, y: ring.Ring64, triple: beaver.ArithTriple,
                comm) -> ring.Ring64:
     return drive(_beaver_mul_rounds(x, y, triple, comm), comm)
+
+
+def _beaver_matmul_rounds(x: ring.Ring64, y: ring.Ring64,
+                          triple: beaver.ArithTriple, comm):
+    """Round generator for Z = X @ Y on Ring64 additive shares.
+
+    Beaver matmul (the transformer's secret-by-secret product): with a
+    matrix triple (A, B, C = A @ B) of matching shapes, both parties open
+    E = X - A and F = Y - B in ONE exchange (the flattened concatenation
+    of both differences — (M*K + K*N) ring elements per batch cell, the
+    open payload ``schedule.open_timeline`` prices) and combine locally
+    with the mod-2^64 plane matmul:
+
+        Z_p = C_p + E @ B_p + A_p @ F + [p == 0] E @ F
+    """
+    P = x.shape[0]
+    e = ring.sub(x, triple.a)
+    f = ring.sub(y, triple.b)
+    ne = int(jnp.size(e.lo) // P)
+    ef = ring.Ring64(
+        jnp.concatenate([e.lo.reshape(P, -1), f.lo.reshape(P, -1)], axis=1),
+        jnp.concatenate([e.hi.reshape(P, -1), f.hi.reshape(P, -1)], axis=1))
+    other = yield ef                                 # single exchange
+    e_open = ring.add(e, ring.Ring64(other.lo[:, :ne].reshape(e.lo.shape),
+                                     other.hi[:, :ne].reshape(e.hi.shape)))
+    f_open = ring.add(f, ring.Ring64(other.lo[:, ne:].reshape(f.lo.shape),
+                                     other.hi[:, ne:].reshape(f.hi.shape)))
+    z = ring.add(triple.c,
+                 ring.add(ring_linalg.matmul_ring(e_open, triple.b),
+                          ring_linalg.matmul_ring(triple.a, f_open)))
+    p0 = comm.party_is(0, z.lo)
+    corr = ring_linalg.matmul_ring(e_open, f_open)
+    return ring.Ring64(jnp.where(p0, ring.add(z, corr).lo, z.lo),
+                       jnp.where(p0, ring.add(z, corr).hi, z.hi))
+
+
+def beaver_matmul(x: ring.Ring64, y: ring.Ring64, triple: beaver.ArithTriple,
+                  comm) -> ring.Ring64:
+    """Z = X @ Y on additive shares; one communication round."""
+    return drive(_beaver_matmul_rounds(x, y, triple, comm), comm)
+
+
+def products_many(specs: Sequence[Tuple[str, ring.Ring64, ring.Ring64,
+                                        beaver.ArithTriple]],
+                  comm) -> List[ring.Ring64]:
+    """Round-shared Beaver products over sibling streams.
+
+    ``specs`` is one ``(kind, x, y, triple)`` per stream with ``kind`` in
+    {"mul", "matmul"}; every stream's single opening is coalesced into ONE
+    exchange (``comm.CoalescingComm``), so N concurrent secret products —
+    across streams and across kinds — cost exactly one fused round.  The
+    open payload per stream is 2n ring elements for "mul" and
+    ``size(x) + size(y)`` for "matmul" (what ``schedule.open_timeline``
+    prices).  Returns per-stream Ring64 results in order.
+    """
+    gens = []
+    for kind, x, y, tri in specs:
+        if kind == "mul":
+            gens.append(_beaver_mul_rounds(x, y, tri, comm))
+        elif kind == "matmul":
+            gens.append(_beaver_matmul_rounds(x, y, tri, comm))
+        else:
+            raise ValueError(f"products_many: unknown kind {kind!r}")
+    return run_streams(comm, gens)
 
 
 # ---------------------------------------------------------------------------

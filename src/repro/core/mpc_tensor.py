@@ -131,6 +131,50 @@ class MPCTensor:
         return MPCTensor(self.data.reshape((self.data.shape[0],) + tuple(shape)),
                          self.frac_bits)
 
+    def transpose(self, *perm) -> "MPCTensor":
+        """Permute the logical axes (the party dim stays leading)."""
+        if len(perm) == 1 and isinstance(perm[0], (tuple, list)):
+            perm = tuple(perm[0])
+        nd = len(self.shape)
+        p = (0,) + tuple(a % nd + 1 for a in perm)
+        return MPCTensor(ring.Ring64(jnp.transpose(self.data.lo, p),
+                                     jnp.transpose(self.data.hi, p)),
+                         self.frac_bits)
+
+    def swapaxes(self, a1: int, a2: int) -> "MPCTensor":
+        nd = len(self.shape)
+        perm = list(range(nd))
+        perm[a1 % nd], perm[a2 % nd] = perm[a2 % nd], perm[a1 % nd]
+        return self.transpose(*perm)
+
+    def repeat(self, reps: int, axis: int) -> "MPCTensor":
+        """``jnp.repeat`` along a logical axis (public structural op)."""
+        ax = axis % len(self.shape) + 1
+        return MPCTensor(ring.Ring64(jnp.repeat(self.data.lo, reps, axis=ax),
+                                     jnp.repeat(self.data.hi, reps, axis=ax)),
+                         self.frac_bits)
+
+    def __getitem__(self, idx) -> "MPCTensor":
+        """Index/slice the logical axes (party dim untouched)."""
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        full = (slice(None),) + idx
+        return MPCTensor(ring.Ring64(self.data.lo[full], self.data.hi[full]),
+                         self.frac_bits)
+
+    # -- secret * secret products ---------------------------------------------
+    def mul(self, other: "MPCTensor", key, comm=None,
+            triple: Optional[beaver.ArithTriple] = None) -> "MPCTensor":
+        """Elementwise secret*secret product (one Beaver open round)."""
+        return products_many(["mul"], [key], [self], [other], comm=comm,
+                             triples_list=[triple])[0]
+
+    def matmul(self, other: "MPCTensor", key, comm=None,
+               triple: Optional[beaver.ArithTriple] = None) -> "MPCTensor":
+        """Secret@secret matmul (one matrix-Beaver open round)."""
+        return products_many(["matmul"], [key], [self], [other], comm=comm,
+                             triples_list=[triple])[0]
+
     # -- the nonlinear op ------------------------------------------------------
     def relu(self, key, comm=None, hb: HBLayer = HBLayer(),
              triples: Optional[beaver.ReluTriples] = None,
@@ -211,4 +255,70 @@ def relu_many(keys, tensors: Sequence["MPCTensor"], comm=None,
     return out
 
 
+def stack(tensors: Sequence["MPCTensor"], axis: int = 0) -> "MPCTensor":
+    """Stack sibling MPCTensors along a new *logical* axis."""
+    fb = tensors[0].frac_bits
+    assert all(t.frac_bits == fb for t in tensors)
+    ax = axis % (len(tensors[0].shape) + 1) + 1
+    lo = jnp.stack([t.data.lo for t in tensors], axis=ax)
+    hi = jnp.stack([t.data.hi for t in tensors], axis=ax)
+    return MPCTensor(ring.Ring64(lo, hi), fb)
+
+
+def concat(tensors: Sequence["MPCTensor"], axis: int = 0) -> "MPCTensor":
+    """Concatenate sibling MPCTensors along an existing *logical* axis."""
+    fb = tensors[0].frac_bits
+    assert all(t.frac_bits == fb for t in tensors)
+    ax = axis % len(tensors[0].shape) + 1
+    lo = jnp.concatenate([t.data.lo for t in tensors], axis=ax)
+    hi = jnp.concatenate([t.data.hi for t in tensors], axis=ax)
+    return MPCTensor(ring.Ring64(lo, hi), fb)
+
+
+def products_many(kinds: Sequence[str], keys, xs: Sequence["MPCTensor"],
+                  ys: Sequence["MPCTensor"], comm=None,
+                  triples_list: Optional[Sequence] = None) -> list:
+    """Round-shared secret*secret products over sibling MPCTensor pairs.
+
+    ``kinds[i]`` selects ``"mul"`` (elementwise, equal shapes) or
+    ``"matmul"`` (batched, contraction on the trailing pair) for pair i;
+    every pair advances through its Beaver protocol in lockstep and the
+    single open of each is coalesced into ONE protocol round
+    (``gmw.products_many``).  ``keys[i]`` deterministically derives the
+    pair's triple when ``triples_list`` leaves it None — the same
+    inline-TTP convention as ``MPCTensor.relu``.  Products of two
+    ``frac_bits`` operands carry ``2*frac_bits``; the results are locally
+    truncated back, so each product costs one +-1 LSB truncation error.
+    """
+    comm = comm or comm_lib.SimComm()
+    n_t = len(xs)
+    triples_list = (list(triples_list) if triples_list is not None
+                    else [None] * n_t)
+    keys = list(keys)
+    if not (len(kinds) == n_t == len(ys) == len(keys) == len(triples_list)):
+        raise ValueError(
+            f"products_many: mismatched lengths kinds={len(kinds)} "
+            f"xs={n_t} ys={len(ys)} keys={len(keys)} "
+            f"triples={len(triples_list)}")
+    specs = []
+    for kind, key, x, y, tri in zip(kinds, keys, xs, ys, triples_list):
+        assert x.frac_bits == y.frac_bits
+        if tri is None:
+            n_parties = x.data.shape[0]
+            if kind == "matmul":
+                tri = beaver.gen_matmul(key, x.shape, y.shape,
+                                        n_parties=n_parties)
+            elif kind == "mul":
+                assert x.shape == y.shape, (x.shape, y.shape)
+                tri = beaver.gen_arith(key, x.shape, n_parties=n_parties)
+            else:
+                raise ValueError(f"unknown product kind {kind!r}")
+        specs.append((kind, x.data, y.data, tri))
+    rets = gmw.products_many(specs, comm)
+    return [MPCTensor(r, x.frac_bits).truncate()
+            for r, x in zip(rets, xs)]
+
+
 MPCTensor.relu_many = staticmethod(relu_many)
+MPCTensor.products_many = staticmethod(products_many)
+MPCTensor.stack = staticmethod(stack)

@@ -69,6 +69,60 @@ def matmul_pub(x: ring.Ring64, w_i32: jax.Array) -> ring.Ring64:
     return out
 
 
+# Secret x secret: both operands decompose to 8 planes, so pairs(s) <= 8
+# and |sum_s| <= 8 * K * 128 * 128 -> K <= 2^31 / (8 * 2^14) = 16384; chunk
+# one power of two below so the bound is strict even in the worst case.
+_MAX_K_RING = 8192
+
+
+def _matmul_ring_chunk(x: ring.Ring64, y: ring.Ring64) -> ring.Ring64:
+    """x: Ring64 [..., M, K]; y: Ring64 [..., K, N] -> Ring64 [..., M, N]."""
+    dx = ring.balanced_digits(x)               # (8, ..., M, K) int8
+    dy = ring.balanced_digits(y)               # (8, ..., K, N) int8
+    prods = jnp.einsum(
+        "i...mk,j...kn->ij...mn",
+        dx.astype(jnp.int8), dy.astype(jnp.int8),
+        preferred_element_type=jnp.int32,
+    )
+    out = ring.zeros(prods.shape[2:])
+    for s in range(8):
+        acc = None
+        for i in range(8):
+            j = s - i
+            if 0 <= j < 8:
+                p = prods[i, j]
+                acc = p if acc is None else acc + p
+        if acc is None:
+            continue
+        out = ring.add(out, ring.lshift(_signed_to_ring64(acc), 8 * s))
+    return out
+
+
+def matmul_ring(x: ring.Ring64, y: ring.Ring64) -> ring.Ring64:
+    """mod-2^64 matmul of two ring-valued tensors (batch dims aligned).
+
+    The secret-by-secret counterpart of ``matmul_pub``: both operands are
+    full 64-bit ring values, so each decomposes into 8 balanced digit
+    planes and the product is the 8x8 plane contraction recombined with
+    64-bit shifts.  This is NOT a protocol — it is the local modular
+    arithmetic that Beaver-triple matmul reduces to (``gmw`` opens
+    ``x - a`` / ``y - b`` and combines public-by-share products with this
+    function).
+    """
+    k = x.shape[-1]
+    assert y.shape[-2] == k, (x.shape, y.shape)
+    if k <= _MAX_K_RING:
+        return _matmul_ring_chunk(x, y)
+    out = None
+    for start in range(0, k, _MAX_K_RING):
+        end = min(k, start + _MAX_K_RING)
+        xs = ring.Ring64(x.lo[..., start:end], x.hi[..., start:end])
+        ys = ring.Ring64(y.lo[..., start:end, :], y.hi[..., start:end, :])
+        part = _matmul_ring_chunk(xs, ys)
+        out = part if out is None else ring.add(out, part)
+    return out
+
+
 def im2col(x: ring.Ring64, kh: int, kw: int, stride: int = 1,
            padding: int = 0) -> ring.Ring64:
     """Ring64 [..., C, H, W] -> [..., OH*OW, C*kh*kw] patch matrix (local op)."""

@@ -137,6 +137,34 @@ def stream_rounds(width: int, cone: bool = False) -> int:
     return len(stream_timeline(32, width, cone=cone)) if width else 0
 
 
+def open_timeline(n_elements: int) -> Tuple[Tuple[str, int], ...]:
+    """One Beaver-product opening's rounds: a single "open" exchange of
+    ``n_elements`` ring elements (per party, one direction).
+
+    This is the secret-by-secret product round of the transformer path
+    (``gmw.products_many``): an elementwise mul of n values opens 2n
+    elements, a matmul of X [.., M, K] @ Y [.., K, N] opens
+    ``size(X) + size(Y)`` — the caller passes the total.  Zero-element
+    opens run no round at all.
+    """
+    if n_elements == 0:
+        return ()
+    return (("open", n_elements * RING_BYTES),)
+
+
+def simulate_open(n_list: Sequence[int]) -> "Schedule":
+    """Fused schedule of one coalesced opening across sibling streams:
+    every stream's single "open" payload rides ONE exchange (1 round,
+    summed bytes); streams opening nothing contribute nothing."""
+    live = [int(n) for n in n_list if n]
+    if not live:
+        return Schedule.empty()
+    total = sum(live) * RING_BYTES
+    slot = RoundSlot(bytes_tx=total, parts=len(live),
+                     phase_bytes=(("open", total),))
+    return Schedule((slot,), ())
+
+
 # ---------------------------------------------------------------------------
 # The fused schedule
 # ---------------------------------------------------------------------------

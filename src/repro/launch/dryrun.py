@@ -125,6 +125,36 @@ def run_mpc_cell(rcfg, hb, tag: str, cone: bool = False) -> dict:
     }
 
 
+def run_lm_mpc_cell(acfg, budget: str, batch: int = 1, seq: int = 32) -> dict:
+    """Trace-only dry-run of the private LM: the reduced-ring plan (PWL
+    activations, ReLU attention, Beaver opens) and its exact schedule
+    prediction.  The LM serves through the sim engine rather than the
+    mesh-native step, so the cell reports the round/byte/latency economy
+    instead of lowered HLO."""
+    from repro.api.plan import LAN, WAN
+    t0 = time.time()
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)   # abstract PRNG key
+    params = jax.eval_shape(functools.partial(lm.init, cfg=acfg), key_spec)
+    plan = lm.trace(params, acfg, batch, seq)
+    if budget != "baseline":
+        k, m = (21, 0) if budget == "eco" else (21, 13)
+        hb = HBConfig(tuple(HBLayer(k=k, m=m)
+                            for _ in range(plan.hb.n_groups)),
+                      plan.hb.group_elements)
+        plan = lm.trace(params, acfg, batch, seq, hb=hb)
+    sched = plan.schedule()
+    return {
+        "arch": f"{acfg.name}-mpc-lm-{budget}", "shape": f"b{batch}_s{seq}",
+        "multi_pod": False, "status": "ok", "n_chips": 1,
+        "compile_s": round(time.time() - t0, 2),
+        "lm": {"n_relu_calls": len(plan.calls), "n_opens": len(plan.opens),
+               "rounds": sched.n_rounds, "bytes_tx": sched.bytes_tx,
+               "budget_fraction": plan.hb.budget_fraction(),
+               "latency_lan_s": sched.latency(LAN.bandwidth_bps, LAN.rtt_s),
+               "latency_wan_s": sched.latency(WAN.bandwidth_bps, WAN.rtt_s)},
+    }
+
+
 def hb_config_for(rcfg, budget: str):
     """Representative found configs (search engine output, see §Perf)."""
     n_groups = 1 + len(rcfg.stage_blocks)
@@ -143,6 +173,10 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--mpc", action="store_true")
+    ap.add_argument("--mpc-arch", default=None,
+                    help="registry arch name for a private-LM MPC cell "
+                         "(e.g. qwen1.5-0.5b-smoke); default: the paper's "
+                         "ResNet pair")
     ap.add_argument("--mpc-budget", default="8of64",
                     choices=["baseline", "eco", "8of64", "8of64cone"])
     ap.add_argument("--multipod-only", action="store_true")
@@ -160,6 +194,23 @@ def main():
         meshes = [False]
 
     if args.mpc:
+        if args.mpc_arch:
+            # LM family resolves by registry name — same idiom as the
+            # ResNet pair below, but through configs.get
+            acfg = get_arch(args.mpc_arch)
+            budget = args.mpc_budget.replace("cone", "")
+            try:
+                out = run_lm_mpc_cell(acfg, budget)
+            except Exception as e:
+                out = {"arch": f"{acfg.name}-mpc-lm-{budget}",
+                       "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+            name = f"mpc_lm_{acfg.name}_{budget}{args.tag}.json"
+            (RESULTS / name).write_text(json.dumps(out, indent=2))
+            print(json.dumps({k: v for k, v in out.items()
+                              if k not in ("trace",)}, indent=2))
+            return
         for rcfg in (RESNET18, RESNET50):
             cone = args.mpc_budget.endswith("cone")
             hb = hb_config_for(rcfg, args.mpc_budget.replace("cone", ""))

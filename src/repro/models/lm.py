@@ -20,6 +20,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api import register_mpc_forward
 from repro.configs.base import ArchConfig
 from repro.nn import attention, common, moe as moe_lib, ssm
 from repro.runtime import constraints
@@ -423,3 +424,174 @@ def prefill(params, tokens, cfg: ArchConfig, max_len: int,
     h = _norm(cfg, params["final_norm"], h)
     logits = common.dense(params["lm_head"], h[:, -1:])
     return common.softcap(logits, cfg.logit_softcap), cache
+
+
+# ---------------------------------------------------------------------------
+# Private inference: reduced-ring MPC forward (dense family)
+# ---------------------------------------------------------------------------
+# The MPC lowering replaces every transformer nonlinearity with a
+# reduced-ring composition (repro.nn.approx): GELU/SiLU become knot-stacked
+# ReLU sums, softmax becomes ReLU + public causal-mean normalization, and
+# rms/layer norms become their static-scale co-design approximation
+# (x * scale — the data-dependent rsqrt has no cheap GMW circuit).
+# ``mpc_reference`` is the plaintext twin of ``_lm_mpc_forward``: it makes
+# the exact same relu_fn / .matmul / .mul hook calls in the same order, so
+# ``trace()`` prices the replay (ReLU groups: 2 per layer — attention
+# scores then MLP activation; Beaver opens: QK^T, A@V, gate*up per layer)
+# and MPC-vs-reference differs only by fixed-point + (k, m) error.
+# Input is the *embedded* hidden states (B, S, d_model) — token lookup
+# happens client-side in the clear, as in the private-LM deployments this
+# follows.
+
+def _static_norm_ref(p, x):
+    y = x * p["scale"]
+    return y + p["bias"] if "bias" in p else y
+
+
+def mpc_reference(params, h, cfg: ArchConfig, relu_fn=None):
+    """Plaintext reference of the MPC-approximated LM forward.
+
+    h: (B, S, d_model) embedded hidden states -> logits (B, S, vocab).
+    ``relu_fn=None`` evaluates with exact ReLU and plain jnp products;
+    passing a traced or reduced-ring relu_fn reproduces the replay's hook
+    sequence exactly.
+    """
+    from repro.nn import approx
+    if cfg.family != "dense":
+        raise ValueError(
+            f"MPC lowering covers the dense family only, not {cfg.family!r}")
+    relu_fn = approx.ensure_hooks(relu_fn)
+    spec = approx.spec_for(cfg.act)
+    b, s, _ = h.shape
+    dh = cfg.resolved_head_dim
+    grp = cfg.n_heads // cfg.n_kv_heads
+    positions = jnp.arange(s)[None, :]
+    for l in range(cfg.n_layers):
+        p = jax.tree_util.tree_map(lambda a: a[l], params["layers"])
+        x = _static_norm_ref(p["ln1"], h)
+        q, k, v = attention._project_qkv(p["attn"], x, cfg.n_heads,
+                                         cfg.n_kv_heads, dh, positions,
+                                         cfg.rope_theta)
+        q = jnp.transpose(q, (0, 2, 1, 3))
+        k = jnp.transpose(k, (0, 2, 1, 3))
+        v = jnp.transpose(v, (0, 2, 1, 3))
+        if grp > 1:
+            k = jnp.repeat(k, grp, axis=1)
+            v = jnp.repeat(v, grp, axis=1)
+        o = approx.relu_attention(q, k, v, 2 * l, relu_fn)
+        o = jnp.transpose(o, (0, 2, 1, 3)).reshape(b, s, cfg.n_heads * dh)
+        h = h + common.dense(p["attn"]["wo"], o)
+        x = _static_norm_ref(p["ln2"], h)
+        up = jnp.einsum("...d,df->...f", x, p["mlp"]["w_up"])
+        if "w_gate" in p["mlp"]:
+            gate = jnp.einsum("...d,df->...f", x, p["mlp"]["w_gate"])
+            act = (relu_fn(gate, 2 * l + 1) if spec is None
+                   else approx.apply_pwl(spec, gate, 2 * l + 1, relu_fn))
+            mid = relu_fn.mul(act, up)
+        else:
+            mid = (relu_fn(up, 2 * l + 1) if spec is None
+                   else approx.apply_pwl(spec, up, 2 * l + 1, relu_fn))
+        h = h + jnp.einsum("...f,fd->...d", mid, p["mlp"]["w_down"])
+    h = _static_norm_ref(params["final_norm"], h)
+    return jnp.einsum("...d,df->...f", h, params["lm_head"]["w"])
+
+
+def _static_norm_mpc(p, h, comm):
+    y = h.mul_public(p["scale"])
+    return y.add_public(p["bias"], comm) if "bias" in p else y
+
+
+def _mpc_proj(x, wp, n_h: int, dh: int, comm):
+    y = x.matmul_public(wp["w"])
+    if "b" in wp:
+        y = y.add_public(wp["b"], comm)
+    return y.reshape(x.shape[0], x.shape[1], n_h, dh)
+
+
+def _rope_mpc(t, s: int, theta: float):
+    """RoPE on a secret (B, S, H, Dh) tensor: cos/sin are public per
+    position, so the rotation is four mul_public + two ring combines."""
+    from repro.core import mpc_tensor
+    dh = t.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs   # (S, half)
+    cos = jnp.cos(angles)[:, None, :]                            # (S, 1, half)
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = t[..., :half], t[..., half:]
+    out1 = x1.mul_public(cos) - x2.mul_public(sin)
+    out2 = x2.mul_public(cos) + x1.mul_public(sin)
+    return mpc_tensor.concat([out1, out2], axis=-1)
+
+
+def _lm_mpc_forward(params, hs, cfg: ArchConfig, relu_fn, comm):
+    """Secret-shared LM forward over sibling MPCTensor streams (the
+    ``register_mpc_forward`` contract) — the MPC twin of
+    ``mpc_reference``, hook call for hook call."""
+    from repro.nn import approx
+    if cfg.family != "dense":
+        raise ValueError(
+            f"MPC lowering covers the dense family only, not {cfg.family!r}")
+    spec = approx.spec_for(cfg.act)
+    dh = cfg.resolved_head_dim
+    grp = cfg.n_heads // cfg.n_kv_heads
+    for l in range(cfg.n_layers):
+        p = jax.tree_util.tree_map(lambda a: a[l], params["layers"])
+        qs, ks, vs = [], [], []
+        for h in hs:
+            s = h.shape[1]
+            x = _static_norm_mpc(p["ln1"], h, comm)
+            q = _mpc_proj(x, p["attn"]["wq"], cfg.n_heads, dh, comm)
+            k = _mpc_proj(x, p["attn"]["wk"], cfg.n_kv_heads, dh, comm)
+            v = _mpc_proj(x, p["attn"]["wv"], cfg.n_kv_heads, dh, comm)
+            if cfg.rope_theta:
+                q = _rope_mpc(q, s, cfg.rope_theta)
+                k = _rope_mpc(k, s, cfg.rope_theta)
+            q = q.transpose(0, 2, 1, 3)
+            k = k.transpose(0, 2, 1, 3)
+            v = v.transpose(0, 2, 1, 3)
+            if grp > 1:
+                k = k.repeat(grp, axis=1)
+                v = v.repeat(grp, axis=1)
+            qs.append(q)
+            ks.append(k)
+            vs.append(v)
+        os_ = approx.relu_attention_mpc(qs, ks, vs, 2 * l, relu_fn)
+        outs = []
+        for h, o in zip(hs, os_):
+            b, s = h.shape[0], h.shape[1]
+            o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * dh)
+            outs.append(h + o.matmul_public(p["attn"]["wo"]["w"]))
+        hs = outs
+        xs = [_static_norm_mpc(p["ln2"], h, comm) for h in hs]
+        ups = [x.matmul_public(p["mlp"]["w_up"]) for x in xs]
+        if "w_gate" in p["mlp"]:
+            gates = [x.matmul_public(p["mlp"]["w_gate"]) for x in xs]
+            acts = (relu_fn(gates, 2 * l + 1) if spec is None
+                    else approx.apply_pwl_mpc(spec, gates, 2 * l + 1,
+                                              relu_fn, comm))
+            mids = relu_fn.mul(acts, ups)
+        else:
+            mids = (relu_fn(ups, 2 * l + 1) if spec is None
+                    else approx.apply_pwl_mpc(spec, ups, 2 * l + 1,
+                                              relu_fn, comm))
+        hs = [h + m.matmul_public(p["mlp"]["w_down"])
+              for h, m in zip(hs, mids)]
+    hs = [_static_norm_mpc(params["final_norm"], h, comm) for h in hs]
+    return [h.matmul_public(params["lm_head"]["w"]) for h in hs]
+
+
+def trace(params, cfg: ArchConfig, batch: int, seq: int, hb=None,
+          name: str = ""):
+    """Shape-trace the MPC-approximated LM into a Plan (2 ReLU groups per
+    layer, 3 Beaver opens per gated layer)."""
+    from repro import api
+
+    def afn(p, x, relu_fn=None):
+        return mpc_reference(p, x, cfg, relu_fn=relu_fn)
+
+    return api.trace_plan(afn, params, (batch, seq, cfg.d_model), hb=hb,
+                          name=name or cfg.name)
+
+
+register_mpc_forward(ArchConfig, _lm_mpc_forward)

@@ -1,0 +1,30 @@
+"""Reduced-ring nonlinearity subsystem for private transformer inference.
+
+Everything nonlinear in an LM block is lowered to compositions the GMW
+engine evaluates natively:
+
+- GELU / SiLU -> affine + reduced-ring ReLU sums (``pwl``): one relu_fn
+  call per activation site, J knot-shifted copies stacked so the per-group
+  (k, m) assignment — and the search engine optimizing it — sees the true
+  element count.
+- softmax -> ReLU attention normalization (``attention``): ReLU on scaled
+  scores + a public causal-mean multiplier; the two secret matmuls open
+  through Beaver rounds fused across sibling streams.
+- ``bounds``: the closed-form fixed-point error bounds tests and the
+  (k, m) search reason with.
+
+Plaintext twins (``apply_pwl``, ``relu_attention``) make the exact same
+``relu_fn`` / ``relu_fn.matmul`` / ``relu_fn.mul`` hook calls in the same
+order as their MPC counterparts, so one trace prices the replay.
+"""
+from .attention import causal_norm, relu_attention, relu_attention_mpc
+from .bounds import discard_margin, magnitude_bound, pwl_fixed_point_bound
+from .pwl import (PWLSpec, apply_pwl, apply_pwl_mpc, ensure_hooks, eval_pwl,
+                  gelu_spec, pwl_max_error, pwl_spec, silu_spec, spec_for)
+
+__all__ = [
+    "PWLSpec", "apply_pwl", "apply_pwl_mpc", "causal_norm", "discard_margin",
+    "ensure_hooks", "eval_pwl", "gelu_spec", "magnitude_bound",
+    "pwl_fixed_point_bound", "pwl_max_error", "pwl_spec", "relu_attention",
+    "relu_attention_mpc", "silu_spec", "spec_for",
+]

@@ -1,0 +1,61 @@
+"""MPC-friendly attention normalization: softmax -> ReLU + causal mean.
+
+Softmax is the round-dominant nonlinearity of private transformer
+inference (exp + reciprocal have no cheap GMW circuit).  Following the
+ReLU-attention line of work, the row normalization
+
+    softmax(s)_ij  ->  ReLU(s_ij) * causal(i, j) / (i + 1)
+
+keeps the only secret-dependent nonlinearity a ReLU — evaluated on the
+reduced ring with a per-site (k, m) choice — while the causal mask and the
+1/(i+1) row mean are PUBLIC multipliers folded into one ``mul_public``.
+Scores are scaled by dh^-1/2 *before* the ReLU so the reduced-ring
+magnitude regime (Theorem 1) sees tamed values; since the scale is
+positive this is mathematically equivalent to scaling after.
+
+Both evaluations share one code shape: scores = Q @ K^T (secret matmul,
+one Beaver open round), scale, ReLU via ``relu_fn``, public mask-norm,
+then the secret A @ V matmul (second open round).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+
+
+def causal_norm(s: int, dtype=jnp.float32) -> jnp.ndarray:
+    """(S, S) public multiplier: causal(i, j) / (i + 1) — lower-triangular
+    mask divided by each row's visible-position count."""
+    tri = jnp.tril(jnp.ones((s, s), dtype))
+    return tri / jnp.arange(1, s + 1, dtype=dtype)[:, None]
+
+
+def relu_attention(q, k, v, group: int, relu_fn):
+    """Plaintext ReLU attention through the relu_fn hook.
+
+    q, k, v: (B, H, S, Dh) — kv heads already repeated to H.  The hook
+    calls (matmul, relu, matmul) happen in the exact order the MPC twin
+    makes them, so a traced plan's opens line up with the replay.
+    """
+    dh = q.shape[-1]
+    s = q.shape[-2]
+    scores = relu_fn.matmul(q, jnp.swapaxes(k, -1, -2)) * (dh ** -0.5)
+    w = relu_fn(scores, group) * causal_norm(s, scores.dtype)
+    return relu_fn.matmul(w, v)
+
+
+def relu_attention_mpc(qs: Sequence, ks: Sequence, vs: Sequence, group: int,
+                       relu_fn) -> List:
+    """Secret-shared ReLU attention over sibling MPCTensor streams.
+
+    Two fused open rounds (QK^T and A@V, all streams coalesced) plus one
+    reduced-ring ReLU pass on the scores; scale and causal mean are local
+    public multiplies.
+    """
+    dh = qs[0].shape[-1]
+    scores = relu_fn.matmul(qs, [k.swapaxes(-1, -2) for k in ks])
+    scores = [t.mul_public(dh ** -0.5) for t in scores]
+    ws = relu_fn(scores, group)
+    ws = [w.mul_public(causal_norm(w.shape[-2])) for w in ws]
+    return relu_fn.matmul(ws, vs)

@@ -1,0 +1,44 @@
+"""Fixed-point error bounds for reduced-ring nonlinearity evaluation.
+
+Closed-form bounds the tests (and the (k, m) search) reason with:
+
+- ``discard_margin(m)``: a DReLU on ring bits [k:m] ignores the low m
+  bits; any input with |x_f| >= 2^(m - frac_bits) keeps its sign decision,
+  so the margin is the worst-case magnitude below which the reduced ring
+  may misclassify.  Monotone nondecreasing in the discarded bits m — the
+  property the hypothesis suite checks.
+- ``magnitude_bound(k)``: the paper's Theorem-1 regime — values must fit
+  the reduced ring's signed range, |x_f| < 2^(k - 1 - frac_bits).
+- ``pwl_fixed_point_bound(spec)``: PWL interpolation error plus the
+  accumulated +-1 LSB truncations of the public combine (one mul_public
+  over J knots).
+"""
+from __future__ import annotations
+
+from repro.core import fixed
+
+from .pwl import PWLSpec, _gelu, _silu, pwl_max_error
+
+
+def discard_margin(m: int, frac_bits: int = fixed.DEFAULT_FRAC_BITS) -> float:
+    """Worst-case |x_f| below which discarding the low ``m`` ring bits can
+    flip a DReLU decision.  0 discarded bits -> exact (margin 0 ulps is
+    still one ulp = 2^-frac_bits in value)."""
+    if m < 0:
+        raise ValueError(f"negative discarded bits: {m}")
+    return (2.0 ** m) / (2.0 ** frac_bits)
+
+
+def magnitude_bound(k: int, frac_bits: int = fixed.DEFAULT_FRAC_BITS) -> float:
+    """Theorem-1 magnitude regime of a k-bit reduced ring: fixed-point
+    values must satisfy |x_f| < 2^(k - 1 - frac_bits)."""
+    return 2.0 ** (k - 1 - frac_bits)
+
+
+def pwl_fixed_point_bound(spec: PWLSpec,
+                          frac_bits: int = fixed.DEFAULT_FRAC_BITS) -> float:
+    """Worst-case |f_hat - f| of one fixed-point PWL activation inside the
+    knot range: interpolation error + J truncation ulps from the combine."""
+    fn = {"silu": _silu, "gelu": _gelu}[spec.name]
+    interp = pwl_max_error(spec, fn, margin=0.0)
+    return interp + spec.n_knots * (2.0 ** -frac_bits)

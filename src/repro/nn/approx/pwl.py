@@ -1,0 +1,183 @@
+"""Reduced-ring piecewise-linear nonlinearities (GELU / SiLU as ReLU sums).
+
+A smooth activation f is lowered to the closed form
+
+    f_hat(x) = c0 + sum_j a_j * ReLU(x - t_j)
+
+over a fixed knot grid t_0 < ... < t_{J-1}: a_0 is the first segment's
+slope, a_j the slope *change* at knot j, and the right tail continues with
+slope 1 (GELU/SiLU are asymptotically the identity).  Left of t_0 the
+approximation is the constant c0 = f(t_0) (both activations vanish there).
+
+The J knot-shifted copies are stacked on a NEW LEADING axis and evaluated
+in ONE ``relu_fn`` call, so under MPC the whole activation costs exactly
+one reduced-ring ReLU pass (J x the elements, round count unchanged) and
+the plan's per-group element counts price the blow-up truthfully.  The
+combine is public: one ``mul_public`` by the coefficient vector plus ring
+adds — each product pays one +-1 LSB truncation, so the fixed-point error
+of one activation is bounded by ~J * 2^-frac_bits on top of the PWL
+interpolation error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PWLSpec:
+    """Closed-form ReLU decomposition of a scalar nonlinearity."""
+
+    name: str
+    knots: Tuple[float, ...]      # t_0 < ... < t_{J-1}
+    coeffs: Tuple[float, ...]     # a_j, one per knot
+    c0: float                     # constant left tail, = f(t_0)
+
+    @property
+    def n_knots(self) -> int:
+        return len(self.knots)
+
+
+def _silu(x: float) -> float:
+    return x / (1.0 + math.exp(-x))
+
+
+def _gelu(x: float) -> float:
+    # tanh form, matching jax.nn.gelu(approximate=True) — the default the
+    # plaintext substrate resolves for cfg.act == "gelu"
+    return 0.5 * x * (1.0 + math.tanh(
+        math.sqrt(2.0 / math.pi) * (x + 0.044715 * x ** 3)))
+
+
+def pwl_spec(fn: Callable[[float], float], lo: float, hi: float, step: float,
+             right_slope: float = 1.0, name: str = "") -> PWLSpec:
+    """Interpolate ``fn`` on the uniform grid [lo, hi] with spacing ``step``.
+
+    Deterministic closed form (no fitting): segment slopes are the secant
+    slopes between adjacent knots; beyond ``hi`` the tail continues with
+    ``right_slope``; below ``lo`` the value is frozen at ``fn(lo)``.
+    """
+    n_seg = int(round((hi - lo) / step))
+    assert abs(lo + n_seg * step - hi) < 1e-9, (lo, hi, step)
+    knots = [lo + j * step for j in range(n_seg + 1)]
+    vals = [fn(t) for t in knots]
+    slopes = [(vals[j + 1] - vals[j]) / step for j in range(n_seg)]
+    slopes.append(right_slope)
+    coeffs = [slopes[0]] + [slopes[j] - slopes[j - 1]
+                            for j in range(1, n_seg + 1)]
+    return PWLSpec(name=name, knots=tuple(knots), coeffs=tuple(coeffs),
+                   c0=vals[0])
+
+
+def silu_spec(lo: float = -8.0, hi: float = 8.0,
+              step: float = 0.5) -> PWLSpec:
+    return pwl_spec(_silu, lo, hi, step, name="silu")
+
+
+def gelu_spec(lo: float = -4.0, hi: float = 4.0,
+              step: float = 0.25) -> PWLSpec:
+    return pwl_spec(_gelu, lo, hi, step, name="gelu")
+
+
+def spec_for(act: str) -> Optional[PWLSpec]:
+    """The reduced-ring lowering of a config ``act`` name.
+
+    Returns None for ``relu`` (already a single relu_fn call, no
+    decomposition needed); raises for activations with no MPC lowering.
+    """
+    if act == "relu":
+        return None
+    if act == "silu":
+        return silu_spec()
+    if act == "gelu":
+        return gelu_spec()
+    raise ValueError(f"no reduced-ring PWL lowering for activation {act!r}")
+
+
+def eval_pwl(spec: PWLSpec, x) -> jax.Array:
+    """Direct (hook-free) evaluation of the closed form — the oracle tests
+    and error-bound sweeps compare against."""
+    x = jnp.asarray(x)
+    y = jnp.full(x.shape, spec.c0, x.dtype)
+    for t, a in zip(spec.knots, spec.coeffs):
+        y = y + a * jnp.maximum(x - t, 0.0)
+    return y
+
+
+def pwl_max_error(spec: PWLSpec, fn: Callable, n: int = 4001,
+                  margin: float = 2.0) -> float:
+    """Max |f_hat - f| on a dense grid spanning the knot range +- margin."""
+    xs = np.linspace(spec.knots[0] - margin, spec.knots[-1] + margin, n)
+    ref = np.asarray([fn(float(v)) for v in xs])
+    got = np.asarray(eval_pwl(spec, xs.astype(np.float32)))
+    return float(np.max(np.abs(got - ref)))
+
+
+def ensure_hooks(relu_fn):
+    """Normalize a plaintext ``relu_fn`` to carry ``.matmul``/``.mul``.
+
+    ``None`` means exact reference evaluation: true ReLU and plain jnp
+    products.  A bare function (e.g. a traced or reduced-ring relu) gets
+    plain-jnp product hooks attached on a wrapper, leaving the caller's
+    object untouched.
+    """
+    if relu_fn is None:
+        base = lambda v, g: jax.nn.relu(v)  # noqa: E731
+    else:
+        base = relu_fn
+    if hasattr(base, "matmul") and hasattr(base, "mul"):
+        return base
+
+    def wrapped(v, g):
+        return base(v, g)
+
+    wrapped.matmul = getattr(base, "matmul", jnp.matmul)
+    wrapped.mul = getattr(base, "mul", jnp.multiply)
+    return wrapped
+
+
+def apply_pwl(spec: PWLSpec, x: jax.Array, group: int, relu_fn) -> jax.Array:
+    """Plaintext PWL activation through the ``relu_fn`` hook.
+
+    Mirrors the MPC data flow exactly: J knot-shifted copies stacked on a
+    new leading axis, ONE relu_fn call, public linear combine — so a plan
+    traced from this function prices the same elements the MPC replay
+    evaluates.
+    """
+    shifted = jnp.stack([x - t for t in spec.knots], axis=0)
+    r = relu_fn(shifted, group)
+    coeffs = jnp.asarray(spec.coeffs, x.dtype).reshape(
+        (spec.n_knots,) + (1,) * x.ndim)
+    return spec.c0 + jnp.sum(r * coeffs, axis=0)
+
+
+def apply_pwl_mpc(spec: PWLSpec, hs: Sequence, group: int, relu_fn,
+                  comm=None) -> List:
+    """Secret-shared PWL activation over sibling MPCTensor streams.
+
+    One ``relu_fn`` call evaluates all J knot-shifted copies of every
+    stream (the reduced-ring (k, m) of ``group`` applies to the stack);
+    the combine is local: one ``mul_public`` by the coefficient vector,
+    J-1 ring adds, one public constant add.
+    """
+    from repro.core import mpc_tensor  # lazy: keep plaintext substrate light
+    stacked = [mpc_tensor.stack([h.add_public(-t, comm) for t in spec.knots],
+                                axis=0)
+               for h in hs]
+    rs = relu_fn(stacked, group)
+    outs = []
+    for r in rs:
+        nd = len(r.shape)
+        coeffs = np.asarray(spec.coeffs, np.float32).reshape(
+            (spec.n_knots,) + (1,) * (nd - 1))
+        w = r.mul_public(coeffs)
+        acc = w[0]
+        for j in range(1, spec.n_knots):
+            acc = acc + w[j]
+        outs.append(acc.add_public(spec.c0, comm))
+    return outs

@@ -462,10 +462,25 @@ class InferenceEngine:
             return len(self._queue)
 
     # -- batching policy evaluation -------------------------------------------
-    def _merged_latency(self, requests: Sequence[Request]) -> float:
+    def _merged_schedule(self, requests: Sequence[Request]):
+        """Exact fused timeline of executing ``requests`` as one batch:
+        ``simulate_merged`` over the ReLU call rows, plus one coalesced
+        round per Beaver-open site (LM secret products).  Open sites align
+        positionally across requests — one mpc_forward body drives every
+        sibling stream — so site i of all requests shares one round with
+        summed payloads."""
+        plans = [self.plan_for_shape(r.shape) for r in requests]
         sched = schedule_lib.simulate_merged(
-            [self.plan_for_shape(r.shape).call_specs() for r in requests],
+            [p.call_specs() for p in plans],
             cone=self.plan.cone, auto_batch=self.policy.merge_identical)
+        open_lists = [p.open_specs() for p in plans]
+        for i in range(max((len(o) for o in open_lists), default=0)):
+            sched = sched + schedule_lib.simulate_open(
+                [o[i] for o in open_lists if i < len(o)])
+        return sched
+
+    def _merged_latency(self, requests: Sequence[Request]) -> float:
+        sched = self._merged_schedule(requests)
         preset = self.policy.preset
         return sched.latency(preset.bandwidth_bps, preset.rtt_s)
 
@@ -569,9 +584,7 @@ class InferenceEngine:
             admitted.append(r)
         if not admitted:                 # every request over-quota or shed
             return None
-        sched = schedule_lib.simulate_merged(
-            [self.plan_for_shape(r.shape).call_specs() for r in admitted],
-            cone=self.plan.cone, auto_batch=self.policy.merge_identical)
+        sched = self._merged_schedule(admitted)
         serial_rounds = sum(
             self.plan_for_shape(r.shape).schedule().n_rounds
             for r in admitted)

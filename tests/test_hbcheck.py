@@ -226,6 +226,37 @@ def test_r006_allows_monotonic_and_sorted_iteration():
     assert _lint(src, "src/repro/core/comm.py") == []
 
 
+def test_r006_covers_nn_approx_round_path():
+    # the reduced-ring nonlinearity subsystem places relu_fn calls and
+    # Beaver opens, so its modules sit on the round path
+    src = """
+    import time
+    def f():
+        return time.time()
+    """
+    for mod in ("src/repro/nn/approx/pwl.py",
+                "src/repro/nn/approx/attention.py",
+                "src/repro/nn/approx/bounds.py",
+                "src/repro/nn/approx/__init__.py"):
+        assert _rules(_lint(src, mod)) == ["R006"], mod
+    # sibling nn modules stay off the round path
+    assert _lint(src, "src/repro/nn/common.py") == []
+
+
+def test_r002_r003_apply_inside_nn_approx():
+    # nn/approx is NOT part of the reveal surface and gets no secret-branch
+    # exemption: the generic rules must fire there unchanged
+    assert _rules(_lint("""
+    def f(x):
+        return x.reveal()
+    """, "src/repro/nn/approx/pwl.py")) == ["R002"]
+    assert _rules(_lint("""
+    def f(x: MPCTensor):
+        if x:
+            return 1
+    """, "src/repro/nn/approx/attention.py")) == ["R003"]
+
+
 # ---------------------------------------------------------------------------
 # baseline machinery
 # ---------------------------------------------------------------------------

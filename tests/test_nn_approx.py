@@ -1,0 +1,168 @@
+"""Reduced-ring nonlinearity subsystem (nn/approx): PWL lowering of
+GELU/SiLU, ReLU attention normalization, and the fixed-point error
+bounds — plaintext closed form vs hook path vs MPC replay across a
+(k, m) sweep."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MPCTensor, comm as comm_lib, mpc_tensor
+from repro.core.hummingbird import HBLayer
+from repro.nn import approx
+from repro.nn.approx.pwl import _gelu, _silu
+
+FNS = {"silu": _silu, "gelu": _gelu}
+
+
+def _spec(act):
+    return approx.silu_spec() if act == "silu" else approx.gelu_spec()
+
+
+def _mk_mpc_relu_fn(hb: HBLayer, comm, seed=7):
+    """Mini MPC harness implementing the nn/approx hook protocol: one
+    relu_many per relu call, one fused products_many per matmul/mul —
+    exactly what api.compile wires up for registered forwards."""
+    keys = iter(jax.random.split(jax.random.PRNGKey(seed), 512))
+
+    def relu_fn(ts, group):
+        return mpc_tensor.relu_many([next(keys) for _ in ts], ts,
+                                    comm=comm, hbs=[hb] * len(ts))
+
+    relu_fn.matmul = lambda xs, ys: mpc_tensor.products_many(
+        ["matmul"] * len(xs), [next(keys) for _ in xs], xs, ys, comm=comm)
+    relu_fn.mul = lambda xs, ys: mpc_tensor.products_many(
+        ["mul"] * len(xs), [next(keys) for _ in xs], xs, ys, comm=comm)
+    return relu_fn
+
+
+# ---------------------------------------------------------------------------
+# Plaintext closed form
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("act,tol", [("silu", 0.02), ("gelu", 0.01)])
+def test_pwl_interpolation_accuracy(act, tol):
+    spec = _spec(act)
+    assert approx.pwl_max_error(spec, FNS[act]) < tol
+    # right tail continues with slope 1 (both activations -> identity)
+    xs = np.asarray([20.0, 50.0], np.float32)
+    np.testing.assert_allclose(np.asarray(approx.eval_pwl(spec, xs)), xs,
+                               atol=tol)
+    # left tail frozen at f(t_0), which is ~0 for both
+    assert abs(float(approx.eval_pwl(spec, -30.0))) < tol
+
+
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_apply_pwl_hook_path_matches_closed_form(act, rng):
+    spec = _spec(act)
+    x = jnp.asarray(rng.uniform(-10, 10, (4, 17)).astype(np.float32))
+    got = approx.apply_pwl(spec, x, 0, approx.ensure_hooks(None))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(approx.eval_pwl(spec, x)),
+                               atol=1e-5)
+
+
+def test_spec_for_resolution():
+    assert approx.spec_for("relu") is None
+    assert approx.spec_for("silu").name == "silu"
+    assert approx.spec_for("gelu").name == "gelu"
+    with pytest.raises(ValueError):
+        approx.spec_for("swiglu2")
+
+
+# ---------------------------------------------------------------------------
+# MPC closeness across the (k, m) sweep
+# ---------------------------------------------------------------------------
+
+# k=22 keeps the Theorem-1 regime: PWL shifts x - t_j reach |x| + 8 <= 14
+# here, against a magnitude bound 2^(22-1-16) = 32.
+KM_SWEEP = [(64, 0), (22, 0), (22, 8)]
+
+
+@pytest.mark.parametrize("k,m", KM_SWEEP)
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_pwl_mpc_matches_plaintext(act, k, m, rng):
+    spec = _spec(act)
+    x = rng.uniform(-6, 6, (2, 48)).astype(np.float32)
+    X = MPCTensor.from_plain(jax.random.PRNGKey(1), jnp.asarray(x))
+    relu_fn = _mk_mpc_relu_fn(HBLayer(k=k, m=m), comm_lib.CoalescingComm())
+    (out,) = approx.apply_pwl_mpc(spec, [X], 0, relu_fn)
+    ref = np.asarray(approx.eval_pwl(spec, X.reveal_np()))
+    # m discarded bits can flip the DReLU of the <=2 knots within the
+    # margin of x; everything else is fixed-point truncation noise
+    tol = 5e-3 + 3 * approx.discard_margin(m)
+    np.testing.assert_allclose(out.reveal_np(), ref, atol=tol)
+    # and the composition stays close to the true activation
+    true = np.vectorize(FNS[act])(X.reveal_np())
+    assert np.max(np.abs(out.reveal_np() - true)) < \
+        approx.pwl_fixed_point_bound(spec) + 3 * approx.discard_margin(m) + 5e-3
+
+
+@pytest.mark.parametrize("k,m", KM_SWEEP)
+def test_relu_attention_mpc_matches_plaintext(k, m, rng):
+    b, h, s, dh = 1, 2, 6, 8
+    q = rng.uniform(-1, 1, (b, h, s, dh)).astype(np.float32)
+    kk = rng.uniform(-1, 1, (b, h, s, dh)).astype(np.float32)
+    v = rng.uniform(-1, 1, (b, h, s, dh)).astype(np.float32)
+    ref = np.asarray(approx.relu_attention(
+        jnp.asarray(q), jnp.asarray(kk), jnp.asarray(v), 0,
+        approx.ensure_hooks(None)))
+    Q = MPCTensor.from_plain(jax.random.PRNGKey(2), jnp.asarray(q))
+    K = MPCTensor.from_plain(jax.random.PRNGKey(3), jnp.asarray(kk))
+    V = MPCTensor.from_plain(jax.random.PRNGKey(4), jnp.asarray(v))
+    relu_fn = _mk_mpc_relu_fn(HBLayer(k=k, m=m), comm_lib.CoalescingComm())
+    (out,) = approx.relu_attention_mpc([Q], [K], [V], 0, relu_fn)
+    # scores are dh^-0.5-scaled products of unit-range values; each Beaver
+    # product pays one truncation and the m-discard its margin
+    tol = 2e-2 + 3 * approx.discard_margin(m)
+    np.testing.assert_allclose(out.reveal_np(), ref, atol=tol)
+
+
+def test_causal_norm_rows_sum_to_one():
+    cn = np.asarray(approx.causal_norm(5))
+    assert np.allclose(np.tril(np.ones((5, 5))) * cn, cn)
+    assert np.allclose(cn.sum(axis=1), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point error bounds
+# ---------------------------------------------------------------------------
+
+def test_bounds_closed_forms():
+    assert approx.discard_margin(0) == pytest.approx(2.0 ** -16)
+    assert approx.magnitude_bound(22) == pytest.approx(32.0)
+    with pytest.raises(ValueError):
+        approx.discard_margin(-1)
+    for act in ("silu", "gelu"):
+        spec = _spec(act)
+        interp = approx.pwl_max_error(spec, FNS[act], margin=0.0)
+        assert approx.pwl_fixed_point_bound(spec) >= interp
+
+
+def test_discard_margin_monotone_sweep():
+    ms = list(range(0, 24))
+    margins = [approx.discard_margin(m) for m in ms]
+    assert all(a <= b for a, b in zip(margins, margins[1:]))
+
+
+def test_discard_margin_monotone_property():
+    """Hypothesis property: the fixed-point misclassification margin is
+    monotone nondecreasing in the number of discarded bits, for every
+    frac_bits the codebase uses."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=200, deadline=None)
+    @hyp.given(m1=st.integers(0, 40), m2=st.integers(0, 40),
+               frac=st.integers(1, 32))
+    def prop(m1, m2, frac):
+        lo, hi = sorted((m1, m2))
+        assert (approx.discard_margin(lo, frac)
+                <= approx.discard_margin(hi, frac))
+        # doubling the discarded bits exactly doubles the margin
+        assert approx.discard_margin(lo + 1, frac) == pytest.approx(
+            2 * approx.discard_margin(lo, frac))
+
+    prop()

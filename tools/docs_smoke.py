@@ -70,6 +70,7 @@ def main() -> int:
     errors = run_python_blocks(readme)
     # docs with an executable-quickstart contract ride the same gate
     errors += run_python_blocks(ROOT / "docs" / "robustness.md")
+    errors += run_python_blocks(ROOT / "docs" / "models.md")
     errors += check_links([readme] + docs)
     for e in errors:
         print(f"DOCS-SMOKE: {e}", file=sys.stderr)
